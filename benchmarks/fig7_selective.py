@@ -1,0 +1,38 @@
+"""Paper Fig. 7: effect of selective scheduling (GraphMP-SS vs GraphMP-NSS).
+
+Runs PR/SSSP/CC with the Bloom-gated scheduler on and off; reports total
+time, per-late-iteration speedup, and how many shard loads were skipped —
+the paper's three reported effects."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import get_store, row
+from repro.core import apps
+from repro.core.engine import VSWEngine
+
+
+def run() -> list[str]:
+    out = []
+    store = get_store()
+    for name, prog, iters in (("pagerank", apps.pagerank(tol=1e-4), 120),
+                              ("sssp", apps.sssp(0), 50),
+                              ("cc", apps.cc(), 50)):
+        on = VSWEngine(store, prog, selective_threshold=1e-3, cache_mode=1,
+                       cache_budget_bytes=1 << 28)
+        off = VSWEngine(store, prog, selective_threshold=-1, cache_mode=1,
+                        cache_budget_bytes=1 << 28)
+        r_on = on.run(max_iters=iters)
+        r_off = off.run(max_iters=iters)
+        assert np.allclose(r_on.values, r_off.values, atol=1e-6, equal_nan=True)
+        skipped = sum(h.shards_skipped for h in r_on.history)
+        total = sum(h.shards_processed + h.shards_skipped for h in r_on.history)
+        late_on = [h.seconds for h in r_on.history if h.selective_enabled]
+        late_off = r_off.history[-len(late_on):] if late_on else []
+        sp = (np.mean([h.seconds for h in late_off]) / np.mean(late_on)
+              if late_on else 1.0)
+        out.append(row(
+            f"fig7_selective_{name}", r_on.total_seconds * 1e6,
+            f"nss_s={r_off.total_seconds:.2f};ss_s={r_on.total_seconds:.2f};"
+            f"skipped={skipped}/{total};late_iter_speedup={sp:.2f}x"))
+    return out

@@ -1,0 +1,82 @@
+"""Distributed-optimization trick: int8 error-feedback gradient compression.
+
+Measures the thing jit-level code can't show directly — the collective bytes
+of the DP gradient psum — by lowering an explicit shard_map reduction in f32
+vs int8 on a forced-8-device subprocess and parsing the HLO (the same parser
+the roofline uses).  The convergence effect of the compression math is
+covered by tests/test_train.py."""
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from benchmarks.common import row
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run() -> list[str]:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, sys
+        sys.path.insert(0, %r)
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.dryrun import collective_bytes
+        from repro.train.train_step import quantize_int8, dequantize_int8
+
+        mesh = jax.make_mesh((8,), ('d',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        G = (1024, 1024)
+
+        N = 8
+
+        def f32_reduce(g):
+            return jax.lax.psum(g, 'd')
+
+        def int8_two_phase(g):
+            # quantized ring-equivalent all-reduce: int8 all_to_all chunks ->
+            # local widen+sum -> requantize -> int8 all_gather.  All wire
+            # payloads are int8 (4x narrower than f32).
+            q, s = quantize_int8(g)
+            qc = q.reshape(N, -1)
+            qx = jax.lax.all_to_all(qc, 'd', split_axis=0, concat_axis=0,
+                                    tiled=True)            # int8 on the wire
+            sx = jax.lax.all_gather(s, 'd')                 # 8 scalars
+            part = (qx.reshape(N, -1).astype(jnp.float32) *
+                    sx[:, None]).sum(0)                      # local reduce
+            q2, s2 = quantize_int8(part)
+            qa = jax.lax.all_gather(q2, 'd', tiled=True)    # int8 on the wire
+            sa = jax.lax.all_gather(s2, 'd')
+            me = jax.lax.axis_index('d')
+            return qa.astype(jnp.float32) * sa[me]
+
+        import numpy as np
+        x = jnp.zeros(G, jnp.float32)
+        # modeled wire bytes per device: all-reduce 2B(N-1)/N; gather/a2a B(N-1)/N
+        def wire(colls):
+            w = 0.0
+            for kind, b in colls.items():
+                w += b * (N - 1) / N * (2.0 if kind == 'all-reduce' else 1.0)
+            return int(w)
+        for name, fn, spec in (('f32_psum', f32_reduce, P()),
+                               ('int8_two_phase', int8_two_phase, P())):
+            sm = jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=P(),
+                               check_vma=False)
+            txt = jax.jit(sm).lower(x.reshape(-1)).compile().as_text()
+            c = collective_bytes(txt)
+            print(name, wire(c))
+    """) % str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    out = []
+    if r.returncode != 0:
+        return [row("grad_compression_bytes", 0.0, "FAILED:" + r.stderr[-200:])]
+    res = dict(line.split() for line in r.stdout.strip().splitlines())
+    f32b, i8b = int(res["f32_psum"]), int(res["int8_two_phase"])
+    out.append(row("grad_compression_bytes", 0.0,
+                   f"f32_psum_wire={f32b};int8_two_phase_wire={i8b};"
+                   f"wire_reduction={f32b/max(i8b,1):.1f}x"))
+    return out

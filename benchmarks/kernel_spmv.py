@@ -1,0 +1,44 @@
+"""SpMV kernel microbench: Pallas (interpret on CPU) vs pure-jnp reference.
+
+On this container the Pallas kernels run in interpret mode, so wall-clock
+favours the jnp path — the structural numbers that matter for the TPU target
+are bytes-per-edge of the ELL layout and padding overhead, reported in the
+derived column.  (On real TPU the same pallas_call compiles to fused VMEM
+tiles; see kernels/spmv/spmv.py.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import get_store, row
+from repro.kernels.spmv.ops import ell_spmv
+
+
+def run() -> list[str]:
+    out = []
+    store = get_store()
+    shard = store.read_shard(0)
+    n = store.num_vertices
+    x = jnp.asarray(np.random.default_rng(0).random(n).astype(np.float32))
+    cols, vals = jnp.asarray(shard.cols), jnp.asarray(shard.vals)
+    rmap = jnp.asarray(shard.row_map)
+    R = shard.shape[0]
+    for use, tag in ((False, "jnp_ref"), (True, "pallas_interpret")):
+        f = lambda: ell_spmv(x, cols, vals, rmap, R, "plus_src", use_pallas=use)
+        jax.block_until_ready(f())  # compile
+        t0 = time.perf_counter()
+        reps = 20 if not use else 3
+        for _ in range(reps):
+            jax.block_until_ready(f())
+        dt = (time.perf_counter() - t0) / reps
+        eps = shard.nnz / dt
+        out.append(row(f"kernel_spmv_{tag}", dt * 1e6,
+                       f"edges_per_s={eps/1e6:.0f}M"))
+    fill = shard.nnz / (shard.shape[0] * shard.shape[1])
+    out.append(row("kernel_spmv_ell_layout", 0.0,
+                   f"R={shard.shape[0]};W={shard.shape[1]};fill={fill:.2f};"
+                   f"bytes_per_edge={shard.padded_bytes()/max(shard.nnz,1):.1f}"))
+    return out

@@ -1,0 +1,192 @@
+"""Regenerate the marked tables in EXPERIMENTS.md from artifacts/dryrun.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.report_experiments
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+ART = Path("artifacts/dryrun")
+EXP = Path("EXPERIMENTS.md")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "gemma-2b", "starcoder2-7b", "minitron-4b", "stablelm-1.6b",
+    "jamba-v0.1-52b", "seamless-m4t-large-v2", "mixtral-8x22b",
+    "kimi-k2-1t-a32b", "qwen2-vl-72b", "xlstm-1.3b",
+]
+
+MOVE_HINT = {
+    "compute_s": "raise arithmetic intensity (fuse elementwise chains, bf16 "
+                 "accumulation where safe)",
+    "memory_s": "cut HBM round-trips: narrower scan dtypes, fewer "
+                "materialized dispatch buffers, remat policy keeping dots",
+    "collective_s": "restructure the collective pattern (replicated-token EP, "
+                    "serve-time weight layout without FSDP gathers, int8 "
+                    "gradient exchange)",
+}
+
+
+def load(tag_filter=None):
+    recs = {}
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        mesh = r["mesh"]
+        tag = ""
+        if "__" in mesh:
+            mesh, tag = mesh.split("__", 1)
+        if (tag_filter or "") != tag:
+            continue
+        recs[(r["arch"], r["shape"], mesh)] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.1f}GiB"
+
+
+def dryrun_table() -> str:
+    recs = load()
+    lines = [
+        "Every applicable (arch × shape) cell lowers **and compiles** on both "
+        "production meshes; `[skip]` rows are the documented long_500k "
+        "inapplicabilities (DESIGN.md §5). Memory columns are per-device from "
+        "`compiled.memory_analysis()` of the real (scanned) program.",
+        "",
+        "| arch | shape | 16x16 | temp/dev | args/dev | 2x16x16 | temp/dev | params |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r1 = recs.get((arch, shape, "pod16x16"))
+            r2 = recs.get((arch, shape, "pod2x16x16"))
+            if r1 is None and r2 is None:
+                continue
+            base = r1 or r2
+            if not base.get("applicable"):
+                lines.append(f"| {arch} | {shape} | [skip] | - | - | [skip] | - | - |")
+                continue
+
+            def cell(r):
+                if r is None:
+                    return "-", "-", "-"
+                if not r.get("ok"):
+                    return "FAIL", "-", "-"
+                m = r.get("full_program", {}).get("memory", {})
+                return (f"ok {r.get('compile_seconds', 0):.0f}s",
+                        fmt_bytes(m.get("temp_size_in_bytes")),
+                        fmt_bytes(m.get("argument_size_in_bytes")))
+
+            c1, t1, a1 = cell(r1)
+            c2, t2, _ = cell(r2)
+            n = (base.get("param_counts") or {}).get("total")
+            pstr = f"{n/1e9:.2f}B" if n else "-"
+            lines.append(f"| {arch} | {shape} | {c1} | {t1} | {a1} | {c2} | {t2} | {pstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    recs = load()
+    lines = [
+        "Single-pod (16×16, 256 chips) roofline terms per cell "
+        "(delta-extrapolated; see §Methodology). `useful` = "
+        "MODEL_FLOPS / HLO_FLOPS_global.",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck | "
+        "useful | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "pod16x16"))
+            if r is None:
+                continue
+            if not r.get("applicable"):
+                lines.append(f"| {arch} | {shape} | - | - | - | [skip] | - | - |")
+                continue
+            if not r.get("ok") or "roofline" not in r:
+                lines.append(f"| {arch} | {shape} | FAIL | | | | | |")
+                continue
+            rf = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {rf['compute_s']:.3f} | "
+                f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+                f"{rf['bottleneck'].replace('_s','')} | "
+                f"{rf['useful_flops_ratio']:.3f} | "
+                f"{MOVE_HINT[rf['bottleneck']]} |")
+    # collective breakdown for the most collective-bound cells
+    lines.append("")
+    lines.append("Collective-bytes breakdown (per device, per step) for the "
+                 "most collective-bound cells:")
+    lines.append("")
+    rows = []
+    for (arch, shape, mesh), r in recs.items():
+        if mesh != "pod16x16" or not r.get("ok") or "roofline" not in r:
+            continue
+        if r["roofline"]["bottleneck"] == "collective_s":
+            rows.append((r["roofline"]["collective_s"], arch, shape,
+                         r["roofline_inputs"]["collective_bytes_per_device"]))
+    for _, arch, shape, colls in sorted(rows, reverse=True)[:6]:
+        det = "; ".join(f"{k}={v/2**30:.2f}GiB" for k, v in sorted(
+            colls.items(), key=lambda kv: -kv[1]))
+        lines.append(f"* **{arch} × {shape}**: {det}")
+    return "\n".join(lines)
+
+
+def perf_table() -> str:
+    base = load()
+    lines = []
+    cells = [("kimi-k2-1t-a32b", "train_4k"),
+             ("kimi-k2-1t-a32b", "decode_32k"),
+             ("jamba-v0.1-52b", "train_4k")]
+    variants = ["perf_it1", "perf_it2", "perf_it3"]
+    header = ("| cell | variant | compute_s | memory_s | collective_s | "
+              "useful | Δ dominant |")
+    lines += [header, "|---|---|---|---|---|---|---|"]
+    for arch, shape in cells:
+        b = base.get((arch, shape, "pod16x16"))
+        if not b or not b.get("ok"):
+            continue
+        rb = b["roofline"]
+        dom = rb["bottleneck"]
+        lines.append(
+            f"| {arch} × {shape} | baseline (paper-faithful) | "
+            f"{rb['compute_s']:.3f} | "
+            f"{rb['memory_s']:.3f} | {rb['collective_s']:.3f} | "
+            f"{rb['useful_flops_ratio']:.3f} | dom={dom.replace('_s','')} |")
+        for tag in variants:
+            v = load(tag).get((arch, shape, "pod16x16"))
+            if not v or not v.get("ok") or "roofline" not in v:
+                continue
+            rv = v["roofline"]
+            delta = rv[dom] / max(rb[dom], 1e-12)
+            lines.append(
+                f"| | {tag} {json.dumps(v.get('variant', {}))} | "
+                f"{rv['compute_s']:.3f} | {rv['memory_s']:.3f} | "
+                f"{rv['collective_s']:.3f} | {rv['useful_flops_ratio']:.3f} | "
+                f"×{delta:.3f} |")
+    return "\n".join(lines)
+
+
+def replace_block(text: str, marker: str, content: str) -> str:
+    pat = re.compile(rf"(<!-- {marker}:BEGIN -->).*?(<!-- {marker}:END -->)",
+                     re.DOTALL)
+    return pat.sub(lambda m: m.group(1) + "\n" + content + "\n" + m.group(2),
+                   text)
+
+
+def main():
+    text = EXP.read_text()
+    text = replace_block(text, "DRYRUN", dryrun_table())
+    text = replace_block(text, "ROOFLINE", roofline_table())
+    text = replace_block(text, "PERF", perf_table())
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Roofline summary from the dry-run artifacts (one row per cell) — the
+benchmark-side view of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+ART = Path("artifacts/dryrun")
+
+
+def run() -> list[str]:
+    out = []
+    if not ART.exists():
+        return [row("roofline_report", 0.0, "no artifacts (run launch/dryrun)")]
+    for p in sorted(ART.glob("*__pod16x16.json")):
+        rec = json.loads(p.read_text())
+        if not rec.get("applicable"):
+            out.append(row(f"roofline_{rec['arch']}_{rec['shape']}", 0.0, "skipped"))
+            continue
+        if not rec.get("ok") or "roofline" not in rec:
+            out.append(row(f"roofline_{rec['arch']}_{rec['shape']}", 0.0,
+                           "FAILED" if not rec.get("ok") else "no-delta"))
+            continue
+        r = rec["roofline"]
+        out.append(row(
+            f"roofline_{rec['arch']}_{rec['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"compute_s={r['compute_s']:.3f};memory_s={r['memory_s']:.3f};"
+            f"collective_s={r['collective_s']:.3f};bottleneck={r['bottleneck']};"
+            f"useful={r['useful_flops_ratio']:.3f}"))
+    return out

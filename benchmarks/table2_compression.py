@@ -1,0 +1,36 @@
+"""Paper Table 2: compression ratio + (de)compression throughput per core.
+
+The paper reports snappy / zlib-1 / zlib-3 on Twitter..EU-2015 shards; this
+container has zstd (mode mapping in core/cache.py), and the shard bytes come
+from the benchmark RMAT store.  The derived column reports ratio and MB/s —
+the numbers that justify cache modes 2-4 (decompress >> disk bandwidth)."""
+from __future__ import annotations
+
+import time
+
+import zstandard
+
+from benchmarks.common import get_store, row
+
+
+def run() -> list[str]:
+    store = get_store()
+    blob = b"".join(store.read_shard_bytes(p)
+                    for p in range(min(store.num_shards, 8)))
+    out = []
+    for mode, level in (("mode2/zstd-1", 1), ("mode3/zstd-3", 3), ("mode4/zstd-9", 9)):
+        c = zstandard.ZstdCompressor(level=level)
+        t0 = time.perf_counter()
+        comp = c.compress(blob)
+        t_c = time.perf_counter() - t0
+        d = zstandard.ZstdDecompressor()
+        t0 = time.perf_counter()
+        raw = d.decompress(comp)
+        t_d = time.perf_counter() - t0
+        assert raw == blob
+        ratio = len(blob) / len(comp)
+        out.append(row(f"table2_compress_{mode}", t_c * 1e6,
+                       f"ratio={ratio:.2f};comp_MBps={len(blob)/t_c/1e6:.0f}"))
+        out.append(row(f"table2_decompress_{mode}", t_d * 1e6,
+                       f"decomp_MBps={len(blob)/t_d/1e6:.0f}"))
+    return out

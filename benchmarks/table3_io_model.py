@@ -1,0 +1,82 @@
+"""Paper Table 3: analytic per-iteration I/O of PSW/ESG/VSP/DSW/VSW, plus a
+MEASURED check that our engine's actual disk bytes match the VSW prediction
+θ·D·|E| (and that the PSW/ESG baselines match theirs).
+
+Instantiated both with the benchmark graph and with the paper's own datasets
+(|V|, |E| from Table 4) so the predicted read volumes can be compared against
+the paper's reported behaviour.
+"""
+from __future__ import annotations
+
+import shutil
+
+import numpy as np
+
+from benchmarks.common import BENCH_DIR, get_graph, get_store, row
+from repro.baselines.esg import ESGEngine
+from repro.baselines.psw import PSWEngine
+from repro.core import apps
+from repro.core.engine import VSWEngine
+
+C, D = 4, 8  # bytes per vertex record / edge record (f32 value, 2xint32 edge)
+
+
+def models(V, E, P, davg, theta):
+    delta = (1 - np.exp(-davg / P)) * P
+    return {
+        "PSW": (C * V + 2 * (C + D) * E, C * V + 2 * (C + D) * E),
+        "ESG": (C * V + (C + D) * E, C * V + C * E),
+        "VSP": (C * (1 + delta) * V + D * E, C * V),
+        "DSW": (C * np.sqrt(P) * V + D * E, C * np.sqrt(P) * V),
+        "VSW": (theta * D * E, 0),
+    }
+
+
+PAPER_GRAPHS = {  # Table 4 of the paper
+    "twitter": (42e6, 1.5e9, 35.3),
+    "uk-2007": (134e6, 5.5e9, 41.2),
+    "uk-2014": (788e6, 47.6e9, 60.4),
+    "eu-2015": (1.1e9, 91.8e9, 85.7),
+}
+
+
+def run() -> list[str]:
+    out = []
+    # analytic table on the paper's graphs (P from 20M-edge shards, θ=0.2
+    # like the paper's EU-2015 cache-0 measurement)
+    for name, (V, E, davg) in PAPER_GRAPHS.items():
+        P = max(int(E // 20e6), 1)
+        m = models(V, E, P, davg, theta=0.2)
+        ratios = {k: m["PSW"][0] / max(v[0], 1) for k, v in m.items()}
+        out.append(row(f"table3_predicted_read_GB_{name}", 0.0,
+                       ";".join(f"{k}={v[0]/1e9:.1f}GB(x{ratios[k]:.0f})"
+                                for k, v in m.items())))
+    # measured: our engine vs prediction on the bench graph
+    src, dst, n = get_graph()
+    store = get_store()
+    E = store.num_edges
+    eng = VSWEngine(store, apps.pagerank(), cache_mode=0)
+    eng.run(max_iters=3)
+    per_iter = eng.cache.stats.disk_bytes / 3
+    pred = store.total_shard_bytes()  # θ=1 at cache-0: every shard read once
+    out.append(row("table3_measured_vsw_read", 0.0,
+                   f"bytes/iter={per_iter/1e6:.1f}MB;pred={pred/1e6:.1f}MB;"
+                   f"ratio={per_iter/pred:.2f}"))
+    # baselines measured (1 iteration I/O pattern)
+    sub = slice(0, min(len(src), 1 << 18))
+    psw = PSWEngine(str(BENCH_DIR / "psw_t3"), src[sub], dst[sub], n)
+    psw.io.reset()
+    psw.run(apps.pagerank(), max_iters=2)
+    esg = ESGEngine(str(BENCH_DIR / "esg_t3"), src[sub], dst[sub], n)
+    esg.io.reset()
+    esg.run(apps.pagerank(), max_iters=2)
+    ne = sub.stop
+    psw_pred = (C * n + 2 * (C + D) * ne) * 2
+    esg_pred = (C * n + (C + D) * ne) * 2
+    out.append(row("table3_measured_psw_read", 0.0,
+                   f"bytes={psw.io.read/1e6:.1f}MB;pred={psw_pred/1e6:.1f}MB"))
+    out.append(row("table3_measured_esg_read", 0.0,
+                   f"bytes={esg.io.read/1e6:.1f}MB;pred={esg_pred/1e6:.1f}MB"))
+    shutil.rmtree(BENCH_DIR / "psw_t3", ignore_errors=True)
+    shutil.rmtree(BENCH_DIR / "esg_t3", ignore_errors=True)
+    return out

@@ -1,0 +1,44 @@
+"""Paper Table 8: preprocessing cost.  Times the 3-step GraphMP pipeline
+(degree scan -> bucket -> CSR/ELL+Bloom) and reports measured I/O bytes
+against the paper's 5·D·|E| prediction; PSW/ESG partitioning measured for
+comparison (ESG cheapest, as in the paper)."""
+from __future__ import annotations
+
+import shutil
+import time
+
+from benchmarks.common import BENCH_DIR, get_graph, row
+from repro.baselines.esg import ESGEngine
+from repro.baselines.psw import PSWEngine
+from repro.graph.preprocess import preprocess_graph
+from repro.graph.storage import write_edge_list
+
+
+def run() -> list[str]:
+    out = []
+    src, dst, n = get_graph()
+    D = 16  # our binary edge record (2 x int64)
+    el = BENCH_DIR / "el_t8"
+    if not (el / "meta.json").exists():
+        write_edge_list(el, [(src, dst)])
+    dest = BENCH_DIR / "store_t8"
+    shutil.rmtree(dest, ignore_errors=True)
+    t0 = time.perf_counter()
+    store = preprocess_graph(str(el), str(dest), threshold_edge_num=1 << 16)
+    t_g = time.perf_counter() - t0
+    io = store.io.read + store.io.written
+    pred = 5 * D * len(src)
+    out.append(row("table8_preprocess_graphmp", t_g * 1e6,
+                   f"s={t_g:.2f};io_MB={io/1e6:.0f};pred_5DE_MB={pred/1e6:.0f};"
+                   f"edges_per_s={len(src)/t_g/1e6:.1f}M"))
+    t0 = time.perf_counter()
+    PSWEngine(str(BENCH_DIR / "psw_t8"), src, dst, n)
+    out.append(row("table8_preprocess_psw", (time.perf_counter() - t0) * 1e6,
+                   f"s={time.perf_counter()-t0:.2f}"))
+    t0 = time.perf_counter()
+    ESGEngine(str(BENCH_DIR / "esg_t8"), src, dst, n)
+    out.append(row("table8_preprocess_esg", (time.perf_counter() - t0) * 1e6,
+                   f"s={time.perf_counter()-t0:.2f}"))
+    for d in ("psw_t8", "esg_t8", "store_t8"):
+        shutil.rmtree(BENCH_DIR / d, ignore_errors=True)
+    return out

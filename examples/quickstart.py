@@ -1,0 +1,46 @@
+"""Quickstart: GraphMP in ~40 lines.
+
+Generates a power-law graph, preprocesses it into destination-interval ELL
+shards on disk (the paper's 3-step pipeline), then runs PageRank with the
+VSW engine — all vertices resident, edges streamed through the compressed
+cache, inactive shards Bloom-skipped.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.core import apps
+from repro.core.engine import VSWEngine
+from repro.graph.generate import rmat_edges, materialize
+from repro.graph.preprocess import preprocess_graph
+from repro.graph.storage import write_edge_list
+
+
+def main():
+    with tempfile.TemporaryDirectory() as td:
+        print("1) generate a 2^14-vertex, ~260k-edge RMAT graph")
+        src, dst = materialize(rmat_edges(scale=14, edge_factor=16, seed=0))
+        write_edge_list(f"{td}/edges", [(src, dst)])
+
+        print("2) preprocess: degree scan -> Algorithm-1 intervals -> ELL shards")
+        store = preprocess_graph(f"{td}/edges", f"{td}/graph",
+                                 threshold_edge_num=1 << 15)
+        print(f"   {store.num_shards} shards, {store.num_edges} edges, "
+              f"{store.num_vertices} vertices")
+
+        print("3) PageRank under VSW (compressed cache, selective scheduling)")
+        engine = VSWEngine(store, apps.pagerank(), cache_mode="auto",
+                           cache_budget_bytes=1 << 28)
+        result = engine.run(max_iters=30)
+        top = np.argsort(result.values)[-5:][::-1]
+        print(f"   {result.iterations} iterations, "
+              f"{result.total_seconds:.2f}s total")
+        print(f"   cache hit ratio {engine.cache.stats.hit_ratio:.2f}, "
+              f"disk bytes {engine.cache.stats.disk_bytes/1e6:.1f}MB")
+        print(f"   top-5 vertices by rank: {top.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

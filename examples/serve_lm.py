@@ -1,0 +1,55 @@
+"""Serve a small model with batched requests: prefill + batched greedy
+decode through the KV-cache engine (contiguous or ring-buffer SWA cache
+depending on the arch).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
+(archs run at reduced scale so this works on CPU)
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=48)
+    args = ap.parse_args()
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                (args.batch, 24)))}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.stub_frames, cfg.d_model)),
+            jnp.float32)
+    if cfg.modality_stub == "image_patches":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.img_patches, cfg.d_model)),
+            jnp.float32)
+        S = 24 + cfg.img_patches
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, :, None], (args.batch, S, 3)).astype(jnp.int32)
+    engine = ServeEngine(model, params)
+    toks, stats = engine.generate(batch, num_tokens=args.tokens)
+    # greedy decode is deterministic: same prompt rows -> same outputs
+    toks2, _ = engine.generate(batch, num_tokens=args.tokens)
+    assert (toks == toks2).all()
+    print(f"{args.arch} (reduced): batch={args.batch} generated "
+          f"{stats.tokens_generated} tokens, "
+          f"prefill {stats.prefill_seconds:.2f}s, "
+          f"{stats.tokens_per_second:.0f} tok/s decode")
+    print("sample:", toks[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs.base import ArchConfig, MoEConfig, MambaConfig, XLSTMConfig, get_config, ARCH_IDS  # noqa: F401

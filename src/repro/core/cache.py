@@ -1,0 +1,167 @@
+"""Compressed edge cache (paper §2.4.2), modes 0-4 with auto-selection.
+
+Spare host memory caches shard blobs; decompression throughput beats disk.
+snappy/zlib-1/zlib-3 from the paper map onto zstd levels 1/3/9 (zstandard is
+the compressor available in this container — DESIGN.md §8.2); the mode
+semantics, γ table and auto-selection rule `min i s.t. S/γᵢ ≤ C` are kept
+verbatim from the paper.
+
+  mode 0: no application cache (OS page cache only)    γ₀ = 1
+  mode 1: cache raw (uncompressed) shard arrays        γ₁ = 1 (paper: 2*)
+  mode 2: cache zstd-1 blobs   (paper: snappy)         γ₂ = 2
+  mode 3: cache zstd-3 blobs   (paper: zlib-1)         γ₃ = 4
+  mode 4: cache zstd-9 blobs   (paper: zlib-3)         γ₄ = 5
+
+(*the paper's γ₁=2 reflects that its disk format is CSV-ish while its cache
+is binary; our disk format is already binary ELL, so γ₁=1. The selection
+rule is unchanged.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import io as _io
+import time
+from collections import OrderedDict
+
+import numpy as np
+import zstandard
+
+from repro.core.shards import ELLShard
+from repro.graph.storage import GraphStore
+
+GAMMA = {0: 1.0, 1: 1.0, 2: 2.0, 3: 4.0, 4: 5.0}
+ZSTD_LEVEL = {2: 1, 3: 3, 4: 9}
+
+
+def auto_select_mode(graph_bytes: int, cache_budget_bytes: int) -> int:
+    """Paper's rule: minimal i with S/γᵢ ≤ C; fall back to mode 4."""
+    for i in range(5):
+        if graph_bytes / GAMMA[i] <= cache_budget_bytes:
+            return i
+    return 4
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    disk_bytes: int = 0
+    decompress_seconds: float = 0.0
+    compress_seconds: float = 0.0
+    evictions: int = 0
+
+    @property
+    def hit_ratio(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+def _pack(shard: ELLShard) -> bytes:
+    buf = _io.BytesIO()
+    mask = shard.cols >= 0
+    unit = bool(np.array_equal(shard.vals, mask.astype(np.float32)))
+    payload = dict(
+        cols=shard.cols,
+        row_map=shard.row_map,
+        meta=np.array([shard.start_vertex, shard.end_vertex, shard.nnz,
+                       int(unit)], dtype=np.int64),
+    )
+    if not unit:
+        payload["vals"] = shard.vals
+    np.savez(buf, **payload)
+    return buf.getvalue()
+
+
+def _unpack(shard_id: int, blob: bytes) -> ELLShard:
+    with np.load(_io.BytesIO(blob)) as z:
+        meta = z["meta"]
+        cols = z["cols"]
+        unit = len(meta) > 3 and bool(meta[3])
+        vals = (cols >= 0).astype(np.float32) if unit else z["vals"]
+        return ELLShard(
+            shard_id=shard_id,
+            start_vertex=int(meta[0]),
+            end_vertex=int(meta[1]),
+            nnz=int(meta[2]),
+            cols=cols,
+            vals=vals,
+            row_map=z["row_map"],
+        )
+
+
+class CompressedShardCache:
+    """LRU cache over shard blobs with byte budget; wraps a GraphStore."""
+
+    def __init__(self, store: GraphStore, mode: int | str = "auto",
+                 budget_bytes: int = 1 << 30):
+        self.store = store
+        self.budget = int(budget_bytes)
+        if mode == "auto":
+            mode = auto_select_mode(store.total_shard_bytes(), self.budget)
+        self.mode = int(mode)
+        self.stats = CacheStats()
+        self._lru: OrderedDict[int, bytes | ELLShard] = OrderedDict()
+        self._bytes = 0
+        self._cctx = (
+            zstandard.ZstdCompressor(level=ZSTD_LEVEL[self.mode])
+            if self.mode in ZSTD_LEVEL else None
+        )
+        self._dctx = zstandard.ZstdDecompressor() if self.mode in ZSTD_LEVEL else None
+
+    @property
+    def cached_bytes(self) -> int:
+        return self._bytes
+
+    @property
+    def cached_shards(self) -> int:
+        return len(self._lru)
+
+    def _entry_nbytes(self, entry) -> int:
+        if isinstance(entry, bytes):
+            return len(entry)
+        return entry.padded_bytes() + entry.row_map.nbytes
+
+    def _evict_until(self, need: int) -> None:
+        while self._bytes + need > self.budget and self._lru:
+            _, old = self._lru.popitem(last=False)
+            self._bytes -= self._entry_nbytes(old)
+            self.stats.evictions += 1
+
+    def get(self, shard_id: int) -> ELLShard:
+        if self.mode == 0:
+            self.stats.misses += 1
+            self.stats.disk_bytes += self.store.shard_nbytes(shard_id)
+            return self.store.read_shard(shard_id)
+        if shard_id in self._lru:
+            self.stats.hits += 1
+            entry = self._lru.pop(shard_id)
+            self._lru[shard_id] = entry  # LRU bump
+            if isinstance(entry, bytes):
+                t = time.perf_counter()
+                blob = self._dctx.decompress(entry)
+                self.stats.decompress_seconds += time.perf_counter() - t
+                return _unpack(shard_id, blob)
+            return entry
+        # miss: disk read, then insert if it fits
+        self.stats.misses += 1
+        self.stats.disk_bytes += self.store.shard_nbytes(shard_id)
+        shard = self.store.read_shard(shard_id)
+        if self.mode == 1:
+            entry: bytes | ELLShard = shard
+        else:
+            t = time.perf_counter()
+            entry = self._cctx.compress(_pack(shard))
+            self.stats.compress_seconds += time.perf_counter() - t
+        need = self._entry_nbytes(entry)
+        if need <= self.budget:
+            self._evict_until(need)
+            self._lru[shard_id] = entry
+            self._bytes += need
+        return shard
+
+    def measured_ratio(self) -> float:
+        """Achieved compression ratio over currently cached shards."""
+        if self.mode in (0, 1) or not self._lru:
+            return 1.0
+        raw = sum(self.store.shard_nbytes(i) for i in self._lru)
+        return raw / max(self._bytes, 1)

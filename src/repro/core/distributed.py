@@ -1,0 +1,181 @@
+"""Distributed VSW (beyond-paper): GraphMP's single-writer invariant on a mesh.
+
+GraphMP is single-machine; its no-atomics property — every in-edge of a vertex
+lives in exactly one shard — extends directly to a device mesh: partition
+destination intervals over the ``data`` axis (one writer device per interval)
+and keep the source array device-resident, refreshed once per iteration by an
+``all_gather`` (the only collective; C|V| per iteration, the same volume the
+paper writes to DRAM).
+
+Per iteration, per device (under shard_map):
+
+    x        = gather_transform(src_full)            # local, no comm
+    partial  = ell_spmv(x, local shards)             # local SpMV (Pallas)
+    new_own  = post(partial, src_own)                # local interval update
+    src_full = all_gather(new_own, 'data')           # frontier exchange
+
+Active-vertex tracking is a psum of changed counts, so the Bloom-filter
+schedule stays identical on every host without coordination (the filters are
+replicated — they are KBs).
+
+The 2-D (src × dst) partition from DESIGN.md §2 maps the ``model`` axis over
+source ranges with a psum over partials; implemented in `spmv_2d` below and
+used by the graph-engine dry-run config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.apps import VertexProgram
+from repro.core.shards import SUBLANE, ELLShard, build_csr_shards, csr_to_ell
+from repro.kernels.spmv.ops import ell_spmv
+
+
+@dataclasses.dataclass
+class DeviceShardedGraph:
+    """Edges repartitioned so device d owns destination interval d (1-D)."""
+
+    num_vertices: int          # padded to a multiple of num_devices
+    num_edges: int
+    cols: np.ndarray           # [D, R, W] int32 (per-device ELL, common shape)
+    vals: np.ndarray           # [D, R, W] float32
+    row_map: np.ndarray        # [D, R] int32 (local row within the device interval)
+    out_deg: np.ndarray        # [num_vertices] int64
+    rows_per_device: int       # interval length n/D
+
+
+def partition_for_mesh(
+    src: np.ndarray, dst: np.ndarray, num_vertices: int, num_devices: int,
+    val: np.ndarray | None = None, ell_max_width: int = 256,
+) -> DeviceShardedGraph:
+    n_pad = ((num_vertices + num_devices - 1) // num_devices) * num_devices
+    per = n_pad // num_devices
+    shards = build_csr_shards(src, dst, n_pad, threshold_edge_num=1 << 62, val=val)
+    # build_csr_shards with huge threshold yields one shard; re-cut at device bounds
+    csr = shards[0]
+    ells: list[ELLShard] = []
+    for d in range(num_devices):
+        lo, hi = d * per, (d + 1) * per
+        sub = dataclasses.replace(
+            csr,
+            shard_id=d,
+            start_vertex=lo,
+            end_vertex=hi,
+            row=csr.row[lo : hi + 1] - csr.row[lo],
+            col=csr.col[csr.row[lo] : csr.row[hi]],
+            val=None if csr.val is None else csr.val[csr.row[lo] : csr.row[hi]],
+        )
+        ells.append(csr_to_ell(sub, max_width=ell_max_width))
+    R = max(((e.shape[0] + SUBLANE - 1) // SUBLANE) * SUBLANE for e in ells)
+    W = max(e.shape[1] for e in ells)
+    cols = np.full((num_devices, R, W), -1, dtype=np.int32)
+    vals = np.zeros((num_devices, R, W), dtype=np.float32)
+    row_map = np.zeros((num_devices, R), dtype=np.int32)
+    for d, e in enumerate(ells):
+        r, w = e.shape
+        cols[d, :r, :w] = e.cols
+        vals[d, :r, :w] = e.vals
+        row_map[d, :r] = e.row_map
+    out_deg = np.bincount(src, minlength=n_pad).astype(np.int64)
+    return DeviceShardedGraph(
+        num_vertices=n_pad, num_edges=len(src), cols=cols, vals=vals,
+        row_map=row_map, out_deg=out_deg, rows_per_device=per,
+    )
+
+
+class DistributedVSW:
+    """1-D distributed VSW engine over a mesh axis (default 'data')."""
+
+    def __init__(self, graph: DeviceShardedGraph, program: VertexProgram,
+                 mesh: Mesh, axis: str = "data", use_pallas: bool | str = "auto"):
+        self.g = graph
+        self.program = program
+        self.mesh = mesh
+        self.axis = axis
+        self.use_pallas = use_pallas
+        self.n = graph.num_vertices
+        edge_spec = P(axis)
+        self._cols = jax.device_put(graph.cols, NamedSharding(mesh, edge_spec))
+        self._vals = jax.device_put(graph.vals, NamedSharding(mesh, edge_spec))
+        self._rmap = jax.device_put(graph.row_map, NamedSharding(mesh, edge_spec))
+        self._out_deg = jnp.asarray(graph.out_deg.astype(np.float32))
+        self._iter_fn = self._build_iter()
+
+    def _build_iter(self):
+        program, n, per = self.program, self.n, self.g.rows_per_device
+        semiring, use_pallas, axis = program.semiring, self.use_pallas, self.axis
+        other_axes = tuple(a for a in self.mesh.axis_names if a != axis)
+
+        def device_iter(src_full, out_deg, cols, vals, row_map):
+            # shard_map gives per-device blocks with a leading length-1 axis
+            cols, vals, row_map = cols[0], vals[0], row_map[0]
+            x = program.gather_transform(src_full, out_deg)
+            R = cols.shape[0]
+            seg = ell_spmv(x, cols, vals, row_map, R, semiring, use_pallas=use_pallas)
+            d = jax.lax.axis_index(axis)
+            old_own = jax.lax.dynamic_slice(src_full, (d * per,), (per,))
+            new_own = program.post(seg[:per], old_own, n).astype(src_full.dtype)
+            changed = jnp.sum(program.changed(new_own, old_own).astype(jnp.int32))
+            new_full = jax.lax.all_gather(new_own, axis, tiled=True)
+            changed_total = jax.lax.psum(changed, axis)
+            return new_full, changed_total
+
+        spec_rep = P()
+        fn = jax.shard_map(
+            device_iter,
+            mesh=self.mesh,
+            in_specs=(spec_rep, spec_rep, P(self.axis), P(self.axis), P(self.axis)),
+            out_specs=(spec_rep, spec_rep),
+            check_vma=False,
+        )
+        return jax.jit(fn)
+
+    def run(self, max_iters: int = 100) -> tuple[np.ndarray, int]:
+        values, _ = self.program.init(self.n, None, self.g.out_deg)
+        src = jnp.asarray(values.astype(np.float32))
+        it = 0
+        for it in range(1, max_iters + 1):
+            src, changed = self._iter_fn(src, self._out_deg, self._cols, self._vals, self._rmap)
+            if int(changed) == 0:
+                break
+        return np.asarray(src), it
+
+
+def spmv_2d(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+            row_map: jnp.ndarray, semiring: str, mesh: Mesh,
+            dst_axis: str = "data", src_axis: str = "model",
+            use_pallas: bool | str = "auto") -> jnp.ndarray:
+    """2-D partitioned SpMV: dst intervals over `dst_axis`, source ranges over
+    `src_axis`.  Each device folds its (dst-block × src-range) ELL tile; a
+    psum over `src_axis` combines partials (min-semirings use pmin via
+    all_gather+fold).  x is sharded by source range; cols are *local* source
+    indices.  Returns per-dst-interval partials sharded over `dst_axis`."""
+
+    def local(x_blk, cols_b, vals_b, row_map_b):
+        # x: [n] split over src_axis -> [n/S]; edge tensors: [D, S, R, W] -> [1, 1, R, W]
+        cols_b, vals_b, row_map_b = cols_b[0, 0], vals_b[0, 0], row_map_b[0, 0]
+        from repro.kernels.spmv.ops import ell_gather_fold
+        partial_rows = ell_gather_fold(x_blk, cols_b, vals_b, semiring,
+                                       use_pallas=use_pallas).reshape(-1)
+        from repro.kernels.spmv.ref import segment_combine
+        seg = segment_combine(partial_rows, row_map_b, cols_b.shape[0], semiring)
+        if semiring.startswith("plus"):
+            seg = jax.lax.psum(seg, src_axis)
+        else:
+            allseg = jax.lax.all_gather(seg, src_axis)  # [S, R]
+            seg = jnp.min(allseg, axis=0)
+        return seg[None]
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(src_axis), P(dst_axis, src_axis), P(dst_axis, src_axis), P(dst_axis, src_axis)),
+        out_specs=P(dst_axis),
+        check_vma=False,
+    )
+    return fn(x, cols, vals, row_map)

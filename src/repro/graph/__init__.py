@@ -1,0 +1,3 @@
+from repro.graph.generate import rmat_edges, uniform_edges, zipf_edges  # noqa: F401
+from repro.graph.storage import GraphStore  # noqa: F401
+from repro.graph.preprocess import preprocess_graph  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.spmv.ops import ell_spmv, ell_fold, ell_gather_fold  # noqa: F401

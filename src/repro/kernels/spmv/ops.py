@@ -1,0 +1,56 @@
+"""jit'd public wrappers for the SpMV kernels.
+
+``use_pallas='auto'`` runs the Pallas kernels in interpret mode on CPU (this
+container) and compiled mode on TPU; ``False`` selects the pure-jnp oracle
+path (used by the engine's reference mode and for A/B testing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmv import ref as _ref
+from repro.kernels.spmv import spmv as _pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if use_pallas == "auto":
+        return True, not _on_tpu()
+    return bool(use_pallas), not _on_tpu()
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "use_pallas"))
+def ell_fold(xg, vals, cols, semiring: str, use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _pallas.ell_fold_pallas(xg, vals, cols, semiring, interpret=interp)
+    return _ref.ell_fold_ref(xg, vals, cols, semiring)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "use_pallas"))
+def ell_gather_fold(x_blk, cols, vals, semiring: str, use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _pallas.ell_gather_fold_pallas(x_blk, cols, vals, semiring, interpret=interp)
+    return _ref.ell_gather_fold_ref(x_blk, cols, vals, semiring)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "num_segments", "use_pallas"))
+def ell_spmv(x, cols, vals, row_map, num_segments: int, semiring: str,
+             use_pallas="auto"):
+    """Full shard update: XLA HBM-gather + Pallas fold + segment combine.
+
+    x: [n] resident source array; returns [num_segments] partials for the
+    shard's destination interval (identity where the interval has no edges).
+    """
+    # masking is handled inside the fold via cols>=0; clamp for a safe gather
+    xg = x[jnp.where(cols >= 0, cols, 0)]
+    partials = ell_fold(xg, vals, cols, semiring, use_pallas=use_pallas)
+    return _ref.segment_combine(partials, row_map, num_segments, semiring)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the blocked-ELL semiring SpMV kernels.
+
+These are the correctness references the Pallas kernels are swept against
+(tests/test_kernels_spmv.py) and the fallback path on backends without
+Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import SEMIRINGS, Semiring
+
+
+def _as_semiring(s: Semiring | str) -> Semiring:
+    return SEMIRINGS[s] if isinstance(s, str) else s
+
+
+def ell_fold_ref(xg: jnp.ndarray, vals: jnp.ndarray, cols: jnp.ndarray,
+                 semiring: Semiring | str) -> jnp.ndarray:
+    """[R, W] gathered sources + edge vals -> [R, 1] per-ELL-row partials.
+
+    ``cols < 0`` marks padded slots (contribute the reduce identity).
+    """
+    sem = _as_semiring(semiring)
+    mask = cols >= 0
+    return sem.fold(vals, xg, mask, axis=-1)[:, None]
+
+
+def ell_gather_fold_ref(x_blk: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                        semiring: Semiring | str) -> jnp.ndarray:
+    """2-D-tiled variant: cols index a small *local* source block x_blk [VB]."""
+    sem = _as_semiring(semiring)
+    mask = cols >= 0
+    xg = x_blk[jnp.where(mask, cols, 0)]
+    return sem.fold(vals, xg, mask, axis=-1)[:, None]
+
+
+def segment_combine(partials: jnp.ndarray, row_map: jnp.ndarray,
+                    num_segments: int, semiring: Semiring | str) -> jnp.ndarray:
+    """Fold wrapped ELL rows of the same destination: [R] -> [num_segments]."""
+    sem = _as_semiring(semiring)
+    p = partials.reshape(-1)
+    if sem.is_plus:
+        return jax.ops.segment_sum(p, row_map, num_segments=num_segments)
+    return jax.ops.segment_min(p, row_map, num_segments=num_segments)
+
+
+def ell_spmv_ref(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                 row_map: jnp.ndarray, num_segments: int,
+                 semiring: Semiring | str) -> jnp.ndarray:
+    """Full shard update oracle: gather + fold + segment-combine.
+
+    x: [n] resident source values; cols/vals: [R, W] blocked-ELL;
+    row_map: [R] local destination row per ELL row; -> [num_segments].
+    """
+    mask = cols >= 0
+    xg = x[jnp.where(mask, cols, 0)]
+    partials = ell_fold_ref(xg, vals, cols, semiring)
+    return segment_combine(partials, row_map, num_segments, semiring)

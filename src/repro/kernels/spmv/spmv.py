@@ -1,0 +1,123 @@
+"""Pallas TPU kernels for blocked-ELL semiring SpMV (the paper's hot loop).
+
+GraphMP's per-shard update — "pull source values, combine along in-edges,
+reduce per destination" — is the compute hot-spot of the whole system.  On
+TPU we lay shards out as blocked-ELL (DESIGN.md §2/§4) and fuse
+mask→combine→reduce in VMEM:
+
+  * ``ell_fold_pallas``        — sources pre-gathered by XLA (HBM gather is
+    XLA-native); kernel folds [R, W] tiles to [R, 1] partials.  Grid is
+    (rows/TR, W/TW) with sequential accumulation over the W axis into the
+    revisited output block (identity-init at the first W step).
+  * ``ell_gather_fold_pallas`` — 2-D-tiled (GridGraph-style) variant where
+    the source *interval* block x_blk is VMEM-resident and the gather runs
+    inside the kernel.  This is the TPU-native analogue of GraphMP sliding
+    its window over vertex intervals: the window IS the VMEM block.
+
+Both are validated in interpret mode against `ref.py` over shape/dtype/
+semiring sweeps (tests/test_kernels_spmv.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.semiring import SEMIRINGS, Semiring
+
+DEFAULT_TR = 256  # row-tile (multiple of 8 sublanes)
+DEFAULT_TW = 512  # width-tile (multiple of 128 lanes)
+
+
+def _as_semiring(s: Semiring | str) -> Semiring:
+    return SEMIRINGS[s] if isinstance(s, str) else s
+
+
+def _fold_tile(sem: Semiring, vals, xg, cols):
+    mask = cols >= 0
+    contrib = sem.combine(vals, xg)
+    contrib = jnp.where(mask, contrib, jnp.asarray(sem.identity, contrib.dtype))
+    if sem.is_plus:
+        return jnp.sum(contrib, axis=-1, keepdims=True)
+    return jnp.min(contrib, axis=-1, keepdims=True)
+
+
+def _ell_fold_kernel(xg_ref, vals_ref, cols_ref, out_ref, *, sem: Semiring):
+    w_step = pl.program_id(1)
+    partial = _fold_tile(sem, vals_ref[...], xg_ref[...], cols_ref[...])
+
+    @pl.when(w_step == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(w_step != 0)
+    def _acc():
+        out_ref[...] = sem.reduce(out_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "tr", "tw", "interpret"))
+def ell_fold_pallas(xg: jnp.ndarray, vals: jnp.ndarray, cols: jnp.ndarray,
+                    semiring: str, tr: int = DEFAULT_TR, tw: int = DEFAULT_TW,
+                    interpret: bool = True) -> jnp.ndarray:
+    """[R, W] -> [R, 1] per-row semiring partials (pre-gathered sources)."""
+    sem = _as_semiring(semiring)
+    R, W = xg.shape
+    tr = min(tr, R)
+    tw = min(tw, W)
+    grid = (pl.cdiv(R, tr), pl.cdiv(W, tw))
+    return pl.pallas_call(
+        functools.partial(_ell_fold_kernel, sem=sem),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 1), xg.dtype),
+        interpret=interpret,
+    )(xg, vals, cols)
+
+
+def _ell_gather_fold_kernel(x_ref, cols_ref, vals_ref, out_ref, *, sem: Semiring):
+    w_step = pl.program_id(1)
+    cols = cols_ref[...]
+    safe = jnp.where(cols >= 0, cols, 0)
+    # VMEM gather: the source interval block is fully resident in x_ref.
+    xg = jnp.take(x_ref[0], safe.reshape(-1), axis=0).reshape(cols.shape)
+    partial = _fold_tile(sem, vals_ref[...], xg, cols)
+
+    @pl.when(w_step == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(w_step != 0)
+    def _acc():
+        out_ref[...] = sem.reduce(out_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "tr", "tw", "interpret"))
+def ell_gather_fold_pallas(x_blk: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                           semiring: str, tr: int = DEFAULT_TR, tw: int = DEFAULT_TW,
+                           interpret: bool = True) -> jnp.ndarray:
+    """2-D-tiled SpMV: cols index the VMEM-resident source block x_blk [VB]."""
+    sem = _as_semiring(semiring)
+    R, W = cols.shape
+    VB = x_blk.shape[0]
+    tr = min(tr, R)
+    tw = min(tw, W)
+    grid = (pl.cdiv(R, tr), pl.cdiv(W, tw))
+    return pl.pallas_call(
+        functools.partial(_ell_gather_fold_kernel, sem=sem),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, VB), lambda i, j: (0, 0)),  # whole interval, revisited
+            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 1), x_blk.dtype),
+        interpret=interpret,
+    )(x_blk[None, :], cols, vals)

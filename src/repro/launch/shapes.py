@@ -1,0 +1,151 @@
+"""Assigned input shapes, per-cell applicability, and ShapeDtypeStruct specs.
+
+All four shapes come from the assignment table; ``decode_*``/``long_*`` lower
+``serve_step`` (one token against a seq_len KV cache), NOT ``train_step``.
+``long_500k`` runs only for sub-quadratic archs (DESIGN.md §5); modality
+frontends are stubs (precomputed frame/patch embeddings in input_specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.dist.context import ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    long: bool = False
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1, long=True),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.long and not cfg.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch (DESIGN.md §5)"
+    return True, ""
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Token batch stand-ins (weak-type-correct, shardable, no allocation)."""
+    B = shape.global_batch
+    if shape.kind == "train":
+        S = shape.seq_len
+        out = {"tokens": _i32(B, S), "targets": _i32(B, S)}
+    elif shape.kind == "prefill":
+        S = shape.seq_len
+        out = {"tokens": _i32(B, S)}
+    else:  # decode: one new token; the cache covers seq_len
+        out = {"tokens": _i32(B, 1)}
+        return _add_modality(cfg, out, B, 1, decode=True)
+    return _add_modality(cfg, out, B, S, decode=False)
+
+
+def _add_modality(cfg: ArchConfig, out: dict, B: int, S: int, *, decode: bool) -> dict:
+    if cfg.modality_stub == "audio_frames" and not decode:
+        out["frames"] = _f32(B, cfg.stub_frames, cfg.d_model)
+    if cfg.modality_stub == "image_patches" and not decode:
+        # patches are part of the sequence budget: text tokens = S - patches
+        pp = min(cfg.img_patches, S // 2)
+        out["tokens"] = _i32(B, S - pp)
+        out["patches"] = _f32(B, pp, cfg.d_model)
+        out["positions"] = _i32(B, S, 3)
+    return out
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeSpec, ctx: ShardCtx) -> dict:
+    def spec(leaf_name):
+        if leaf_name in ("frames", "patches"):
+            return ctx.logical_sharding(("batch", "seq", None))
+        if leaf_name == "positions":
+            return ctx.logical_sharding(("batch", "seq", None))
+        return ctx.logical_sharding(("batch", "seq"))
+
+    return {k: (spec(k) if v.ndim > 1 else ctx.logical_sharding(("batch",)))
+            for k, v in batch_specs(cfg, shape).items()}
+
+
+# --------------------------------------------------------------------------
+# cache shardings (path-matched: robust across heterogeneous arch families)
+# --------------------------------------------------------------------------
+def cache_shardings(cache_abstract, cfg: ArchConfig, ctx: ShardCtx):
+    """Abstract cache tree -> NamedSharding tree, by leaf path."""
+    mesh = ctx.mesh
+
+    def rule(path_str: str, leaf) -> NamedSharding:
+        ndim = len(leaf.shape)
+        dp = ctx.rules.get("batch")
+        tp = ctx.rules.get("q_heads")
+        kvseq = ctx.rules.get("kv_seq")
+        axes: list = [None] * ndim
+        if "attn" in path_str and "pos" in path_str.rsplit("/", 1)[-1]:
+            pass  # replicated ring positions
+        elif "attn" in path_str:  # [L, B, S, K, hd]
+            axes[1] = dp
+            if kvseq is not None and not cfg.sliding_window:
+                axes[2] = kvseq
+            if tp is not None and leaf.shape[3] % ctx.axis_size("q_heads") == 0:
+                axes[3] = tp
+        elif "mamba" in path_str:  # conv [L,B,dc,di] | ssm [L,B,di,N]
+            axes[1] = dp
+            di_axis = 3 if path_str.endswith("conv") else 2
+            if tp is not None and leaf.shape[di_axis] % ctx.axis_size("q_heads") == 0:
+                axes[di_axis] = tp
+        elif "mlstm" in path_str or "slstm" in path_str:
+            axes[1] = dp  # [L, B, ...]: batch-shard recurrent states
+        return NamedSharding(mesh, P(*axes))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(k) for k in path)
+        out.append(rule(pstr, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decode_input_specs(model, cfg: ArchConfig, shape: ShapeSpec):
+    """(caches, tokens, pos, enc_out) abstract inputs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: model.init_cache(B, S))
+    toks = _i32(B, 1)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = jax.ShapeDtypeStruct((B, cfg.stub_frames, cfg.d_model),
+                                       jnp.bfloat16 if cfg.dtype == "bfloat16"
+                                       else jnp.float32)
+    return caches, toks, pos, enc_out
+
+
+def make_concrete(spec_tree, rng: np.random.Generator, vocab: int):
+    """Instantiate SDS trees with real values (smoke tests / examples)."""
+
+    def one(s):
+        if s.dtype == jnp.int32:
+            return jnp.asarray(rng.integers(0, vocab, s.shape), jnp.int32)
+        return jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+
+    return jax.tree_util.tree_map(one, spec_tree)

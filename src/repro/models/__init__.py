@@ -1,0 +1,2 @@
+# NOTE: intentionally no eager re-exports — repro.dist.context imports
+# repro.models.nn, so importing model here would create an import cycle.

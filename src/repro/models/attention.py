@@ -1,0 +1,295 @@
+"""Attention: GQA/MQA, RoPE/partial-RoPE/M-RoPE, sliding window, flash-blocked.
+
+Memory discipline follows the paper's VSW insight applied to attention
+(DESIGN.md §5): the KV cache is the resident "vertex array" (HBM, sharded);
+the score matrix is never materialized — both training and decode stream KV
+in blocks with running (max, denom, acc) statistics, which is also what the
+Pallas flash kernel would do on real TPU.
+
+GQA on a 16-way tensor-parallel mesh repeats KV heads up to the TP degree
+when needed (MaxText-style; see DESIGN.md §5 — e.g. kv=8 -> 16).  Archs whose
+q-head count doesn't divide the TP degree keep attention replicated (gemma,
+starcoder2, minitron) and take TP on the MLP only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.context import ShardCtx
+from repro.models import nn
+from repro.models.nn import KeyGen, Param
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, fraction: float, theta: float) -> jnp.ndarray:
+    rot = int(head_dim * fraction) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, fraction: float,
+               theta: float, mrope_sections: tuple[int, ...] | None = None):
+    """x: [B, S, H, hd]; positions: [B, S] or [B, S, 3] for M-RoPE."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    inv = rope_freqs(hd, fraction, theta)  # [rot/2]
+    if mrope_sections is not None:
+        # M-RoPE: split the rot/2 frequency slots into (t, h, w) sections,
+        # each driven by its own position stream (arXiv:2409.12191 §3).
+        secs = np.asarray(mrope_sections)
+        assert secs.sum() == rot // 2, (secs, rot)
+        sec_id = np.repeat(np.arange(3), secs)  # [rot/2] -> which pos stream
+        pos = positions[..., sec_id]            # [B, S, rot/2]
+        ang = pos.astype(jnp.float32) * inv
+    else:
+        ang = positions[..., None].astype(jnp.float32) * inv  # [B, S, rot/2]
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2 :]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+def positions_for(cfg, batch: int, seq: int, offset=0) -> jnp.ndarray:
+    pos = offset + jnp.arange(seq)[None, :]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_type == "mrope":
+        return jnp.broadcast_to(pos[..., None], (batch, seq, 3))  # text: t=h=w
+    return pos
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+def init_attention(kg: KeyGen, cfg, dtype) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": nn.dense_init(kg(), (d, H, hd), ("embed", "q_heads", "head_dim"), dtype),
+        "wk": nn.dense_init(kg(), (d, K, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": nn.dense_init(kg(), (d, K, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": nn.dense_init(kg(), (H, hd, d), ("q_heads", "head_dim", "embed"), dtype),
+    }
+
+
+def init_cross_attention(kg: KeyGen, cfg, dtype) -> dict:
+    return init_attention(kg, cfg, dtype)
+
+
+def kv_repeat_for(cfg, ctx: ShardCtx) -> int:
+    """Physical KV-head repetition so heads shard on the model axis."""
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    tp = ctx.axis_size("q_heads")
+    if tp <= 1 or H % tp != 0:
+        return 1
+    r = 1
+    while (K * r) % tp != 0 and (K * r) < H:
+        r *= 2
+    return r if (K * r) % tp == 0 and H % (K * r) == 0 else 1
+
+
+# --------------------------------------------------------------------------
+# flash attention (blocked, pure JAX; numerics match naive softmax)
+# --------------------------------------------------------------------------
+def _block_attend(q, kblk, vblk, m, l, acc, qpos, kpos, *, causal, window, kv_len):
+    """One KV block of the streaming softmax. q:[B,Sq,K,G,hd] kblk:[B,bk,K,hd]."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgh,bjkh->bkgqj", q, kblk, preferred_element_type=jnp.float32)
+    s = s * scale
+    mask = jnp.ones(s.shape[-2:], dtype=bool)  # [Sq, bk] over (qpos, kpos)
+    valid = (kpos[None, :] >= 0)
+    if kv_len is not None:
+        valid = valid & (kpos[None, :] < kv_len)
+    if causal:
+        valid = valid & (kpos[None, :] <= qpos[:, None])
+    if window:
+        valid = valid & (kpos[None, :] > qpos[:, None] - window)
+    mask = mask & valid
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))            # [B,K,G,Sq]
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqj,bjkh->bqkgh", p.astype(vblk.dtype), vblk,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_k", "unroll"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, kv_len=None, kv_positions=None, block_k: int = 512,
+                    unroll: bool = False):
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, Keff, hd] -> [B, Sq, H, hd].
+
+    Streams KV in blocks; never materializes [Sq, Skv].  ``kv_len`` masks a
+    padded cache (decode); ``q_offset`` is the absolute position of q[0];
+    ``kv_positions`` [Skv] overrides slot positions (ring-buffer SWA caches,
+    where slot order is not chronological; -1 marks empty slots).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    bk = min(block_k, Skv)
+    nblk = (Skv + bk - 1) // bk
+    pad = nblk * bk - Skv
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+        if kv_len is not None:
+            kv_positions = jnp.where(kv_positions < kv_len, kv_positions, -1)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    kb = k.reshape(B, nblk, bk, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, bk, K, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(nblk, bk)
+    qpos = q_offset + jnp.arange(Sq)
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, hd), jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, kpos = blk
+        m, l, acc = _block_attend(qg, kblk, vblk, m, l, acc, qpos, kpos,
+                                  causal=causal, window=window, kv_len=None)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb),
+                                  unroll=nblk if unroll else 1)
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+def attention_apply(p: dict, x, positions, cfg, ctx: ShardCtx, *,
+                    causal: bool = True, cache: dict | None = None,
+                    cache_index=None, kv_seq_sharded: bool = False,
+                    cross_kv: jnp.ndarray | None = None, unroll: bool = False):
+    """Self- or cross-attention.
+
+    train/prefill: cache is None (or a dict to fill at positions [0, S)).
+    decode: x is [B, 1, d], cache holds [B, S_max, Keff, hd], cache_index is
+    the write position (scalar).  Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    rep = kv_repeat_for(cfg, ctx)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].value)
+    kv_src = cross_kv if cross_kv is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].value)
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].value)
+    if cfg.rope_type in ("rope", "partial", "mrope") and cross_kv is None:
+        frac = cfg.rope_fraction if cfg.rope_type == "partial" else 1.0
+        sections = None
+        if cfg.rope_type == "mrope":
+            base = hd // 2
+            sections = (base - 2 * (base // 3), base // 3, base // 3)
+        q = apply_rope(q, positions, fraction=frac, theta=cfg.rope_theta,
+                       mrope_sections=sections)
+        k = apply_rope(k, positions, fraction=frac, theta=cfg.rope_theta,
+                       mrope_sections=sections)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q = ctx.constrain(q, ("batch", "seq", "q_heads", "head_dim"))
+    k = ctx.constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    window = cfg.sliding_window
+
+    new_cache = cache
+    if cache is not None and cache_index is not None and S == 1:
+        # decode: write the new KV into the cache, attend over it.  SWA archs
+        # use a ring buffer of size window with per-slot absolute positions.
+        S_max = cache["k"].shape[1]
+        ring = "pos" in cache
+        slot = jax.lax.rem(cache_index, S_max) if ring else cache_index
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        if ring:
+            pos = jax.lax.dynamic_update_slice(
+                cache["pos"], cache_index[None].astype(cache["pos"].dtype), (slot,))
+            new_cache["pos"] = pos
+            out = flash_attention(q, k_cache, v_cache, causal=True, window=window,
+                                  q_offset=cache_index, kv_positions=pos,
+                                  unroll=unroll)
+        elif kv_seq_sharded and ctx.enabled:
+            out = flash_decode_sharded(q, k_cache, v_cache, cache_index + 1, ctx,
+                                       q_offset=cache_index, window=window)
+        else:
+            out = flash_attention(q, k_cache, v_cache, causal=True, window=window,
+                                  q_offset=cache_index, kv_len=cache_index + 1,
+                                  unroll=unroll)
+    else:
+        out = flash_attention(q, k, v, causal=causal and cross_kv is None,
+                              window=window, unroll=unroll)
+        if cache is not None:  # prefill fill (keep the last S_max positions)
+            S_max = cache["k"].shape[1]
+            if S_max >= k.shape[1]:
+                kpad = S_max - k.shape[1]
+                new_cache = {
+                    "k": jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0))),
+                }
+                kept = jnp.arange(S_max)
+                pos0 = jnp.where(kept < k.shape[1], kept, -1)
+            else:
+                new_cache = {"k": k[:, -S_max:], "v": v[:, -S_max:]}
+                pos0 = jnp.arange(k.shape[1] - S_max, k.shape[1])
+            if "pos" in cache:
+                new_cache["pos"] = pos0.astype(cache["pos"].dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].value)
+    return ctx.constrain(y, ("batch", "seq", "embed")), new_cache
+
+
+def flash_decode_sharded(q, k_cache, v_cache, kv_len, ctx: ShardCtx, *,
+                         q_offset, window: int = 0):
+    """Sequence-parallel decode (long_500k): the KV cache is sharded over the
+    'data' axis on its sequence dim; each device computes partial flash stats
+    over its KV slice and the softmax is combined with tiny collectives
+    (max, then sum) — flash-decoding adapted to shard_map."""
+    mesh = ctx.mesh
+    axis = "data"
+    P = jax.sharding.PartitionSpec
+
+    def local(qb, kb, vb):
+        Sl = kb.shape[1]
+        me = jax.lax.axis_index(axis)
+        base = me * Sl
+        B, Sq, H, hd = qb.shape
+        K = kb.shape[2]
+        G = H // K
+        qg = qb.reshape(B, Sq, K, G, hd)
+        m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+        a0 = jnp.zeros((B, Sq, K, G, hd), jnp.float32)
+        kpos = base + jnp.arange(Sl)
+        qpos = q_offset + jnp.arange(Sq)
+        m, l, acc = _block_attend(qg, kb, vb, m0, l0, a0, qpos, kpos,
+                                  causal=True, window=window, kv_len=kv_len)
+        # combine partial softmax stats across the sequence shards
+        m_all = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_all)
+        l_all = jax.lax.psum(l * corr, axis)
+        acc_all = jax.lax.psum(acc * corr.transpose(0, 3, 1, 2)[..., None], axis)
+        out = acc_all / jnp.maximum(l_all, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return out.reshape(B, Sq, H, hd).astype(qb.dtype)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, axis), P(None, axis)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(q, k_cache, v_cache)

@@ -1,0 +1,40 @@
+"""Dense FFN variants: SwiGLU / GeGLU / GELU / squared-ReLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import ShardCtx
+from repro.models import nn
+from repro.models.nn import KeyGen
+
+
+def init_ffn(kg: KeyGen, d: int, d_ff: int, mlp_type: str, dtype) -> dict:
+    p = {
+        "w_up": nn.dense_init(kg(), (d, d_ff), ("embed", "ffn"), dtype),
+        "w_down": nn.dense_init(kg(), (d_ff, d), ("ffn", "embed"), dtype),
+    }
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = nn.dense_init(kg(), (d, d_ff), ("embed", "ffn"), dtype)
+    return p
+
+
+def _act(h, mlp_type: str):
+    if mlp_type == "gelu":
+        return jax.nn.gelu(h)
+    if mlp_type == "relu2":
+        return jnp.square(jax.nn.relu(h))
+    raise ValueError(mlp_type)
+
+
+def ffn_apply(p: dict, x, mlp_type: str, ctx: ShardCtx):
+    if mlp_type in ("swiglu", "geglu"):
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].value)
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"].value)
+        gate = jax.nn.silu(gate) if mlp_type == "swiglu" else jax.nn.gelu(gate)
+        h = gate * up
+    else:
+        h = _act(jnp.einsum("bsd,df->bsf", x, p["w_up"].value), mlp_type)
+    h = ctx.constrain(h, ("batch", "seq", "ffn"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].value)
+    return ctx.constrain(y, ("batch", "seq", "embed"))

@@ -1,0 +1,377 @@
+"""Unified model: one composable block stack covering all 10 assigned archs.
+
+A config is compiled to *layer groups*: (unit_pattern, repeat) pairs where a
+unit is a tuple of (mixer, ffn) block descriptors — mixer ∈ {attn, mamba,
+mlstm, slstm}, ffn ∈ {ffn, moe, none}.  Each group scans over `repeat` with
+stacked params (small HLO, fast multi-pod compile); `unroll=True` flattens
+the scans for the roofline delta method (EXPERIMENTS.md §Roofline-method).
+
+Examples:
+  gemma-2b        [(attn+ffn,), 18]
+  kimi-k2         [(attn+ffn,), 1] + [(attn+moe,), 60]        (first layer dense)
+  jamba           [(mamba+ffn, mamba+moe, ... attn ..., ×8), 4]  (7:1, MoE every 2)
+  xlstm-1.3b      [(mlstm ×7, slstm), 6]
+  seamless        encoder [(attn+ffn,), 24] + decoder [(attn+xattn+ffn,), 24]
+
+Modes: loss (train), prefill (fill caches, last-position logits), decode
+(one token against caches/states).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.context import ShardCtx
+from repro.models import nn
+from repro.models.attention import (attention_apply, init_attention,
+                                    kv_repeat_for, positions_for)
+from repro.models.ffn import ffn_apply, init_ffn
+from repro.models.moe import init_moe, moe_apply
+from repro.models.ssm import init_mamba, init_mamba_state, mamba_apply
+from repro.models.xlstm import (init_mlstm, init_mlstm_state, init_slstm,
+                                init_slstm_state, mlstm_apply, slstm_apply)
+from repro.models.nn import KeyGen, Param
+
+VOCAB_PAD_MULTIPLE = 2048  # pad vocab so 16-way 'model' sharding divides
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    m = VOCAB_PAD_MULTIPLE
+    return ((cfg.vocab_size + m - 1) // m) * m
+
+
+# --------------------------------------------------------------------------
+# layer groups
+# --------------------------------------------------------------------------
+def layer_groups(cfg: ArchConfig, *, encoder: bool = False) -> list[tuple[tuple, int]]:
+    if encoder:
+        return [((("attn", "ffn"),), cfg.encoder_layers)]
+    if cfg.xlstm is not None:
+        k = cfg.xlstm.slstm_every
+        unit = tuple([("mlstm", "none")] * (k - 1) + [("slstm", "none")])
+        assert cfg.num_layers % k == 0
+        return [(unit, cfg.num_layers // k)]
+    if cfg.attn_every:  # jamba: one attn per attn_every, MoE every other layer
+        unit = []
+        for i in range(cfg.attn_every):
+            mixer = "attn" if i == cfg.attn_every // 2 else "mamba"
+            ffn = "moe" if (cfg.moe is not None and i % 2 == 1) else "ffn"
+            unit.append((mixer, ffn))
+        assert cfg.num_layers % cfg.attn_every == 0
+        return [(tuple(unit), cfg.num_layers // cfg.attn_every)]
+    if cfg.moe is not None:
+        groups: list[tuple[tuple, int]] = []
+        fk = cfg.moe.first_k_dense
+        if fk:
+            groups.append(((("attn", "ffn"),), fk))
+        groups.append(((("attn", "moe"),), cfg.num_layers - fk))
+        return groups
+    return [((("attn", "ffn"),), cfg.num_layers)]
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+def _init_block(kg: KeyGen, desc, cfg: ArchConfig, dtype, *, cross: bool) -> dict:
+    mixer, ffn = desc
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": nn.init_norm(cfg.norm_type, d, jnp.float32)}
+    if mixer == "attn":
+        p["attn"] = init_attention(kg, cfg, dtype)
+    elif mixer == "mamba":
+        p["mamba"] = init_mamba(kg, d, cfg.mamba, dtype)
+    elif mixer == "mlstm":
+        p["mlstm"] = init_mlstm(kg, d, cfg.num_heads, cfg.xlstm, dtype)
+    elif mixer == "slstm":
+        p["slstm"] = init_slstm(kg, d, cfg.num_heads, cfg.xlstm, dtype)
+    if cross:
+        p["norm_x"] = nn.init_norm(cfg.norm_type, d, jnp.float32)
+        p["xattn"] = init_attention(kg, cfg, dtype)
+    if ffn == "ffn":
+        p["norm2"] = nn.init_norm(cfg.norm_type, d, jnp.float32)
+        p["ffn"] = init_ffn(kg, d, cfg.d_ff, cfg.mlp_type, dtype)
+    elif ffn == "moe":
+        p["norm2"] = nn.init_norm(cfg.norm_type, d, jnp.float32)
+        p["moe"] = init_moe(kg, d, cfg.moe, cfg.mlp_type, dtype)
+    return p
+
+
+def _init_cache_block(desc, cfg: ArchConfig, batch: int, cache_len: int, ctx: ShardCtx,
+                      dtype, *, cross: bool) -> dict:
+    mixer, _ = desc
+    c: dict[str, Any] = {}
+    if mixer == "attn":
+        K = cfg.num_kv_heads * kv_repeat_for(cfg, ctx)
+        hd = cfg.resolved_head_dim
+        slen = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        c["attn"] = {
+            "k": jnp.zeros((batch, slen, K, hd), dtype),
+            "v": jnp.zeros((batch, slen, K, hd), dtype),
+        }
+        if cfg.sliding_window:
+            c["attn"]["pos"] = jnp.full((slen,), -1, jnp.int32)
+    elif mixer == "mamba":
+        c["mamba"] = init_mamba_state(cfg, batch, dtype)
+    elif mixer == "mlstm":
+        di = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+        c["mlstm"] = init_mlstm_state(batch, cfg.num_heads, di // cfg.num_heads)
+    elif mixer == "slstm":
+        c["slstm"] = init_slstm_state(batch, cfg.d_model)
+    del cross
+    return c
+
+
+def _apply_block(desc, p, x, positions, cfg: ArchConfig, ctx: ShardCtx, *,
+                 cache, cache_index, enc_out, causal, unroll, long_context,
+                 ssm_dtype: str = "float32"):
+    mixer, ffn = desc
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+    h = nn.apply_norm(x, p["norm1"], cfg.norm_type)
+    if mixer == "attn":
+        a, nc = attention_apply(
+            p["attn"], h, positions, cfg, ctx, causal=causal,
+            cache=None if cache is None else cache["attn"],
+            cache_index=cache_index, unroll=unroll,
+            kv_seq_sharded=long_context and not cfg.sliding_window)
+        if nc is not None and cache is not None:
+            new_cache["attn"] = nc
+        x = x + a
+    elif mixer == "mamba":
+        # unroll (roofline delta) uses one full-sequence chunk: identical math,
+        # log-depth associative scan, far smaller HLO than 16 unrolled chunks
+        a, st = mamba_apply(p["mamba"], h, cfg.mamba, ctx,
+                            state=None if cache is None else cache["mamba"],
+                            unroll=unroll,
+                            chunk=x.shape[1] if unroll else 256,
+                            scan_dtype=ssm_dtype)
+        if cache is not None:
+            new_cache["mamba"] = st
+        x = x + a
+    elif mixer == "mlstm":
+        a, st = mlstm_apply(p["mlstm"], h, cfg.num_heads, cfg.xlstm, ctx,
+                            state=None if cache is None else cache["mlstm"],
+                            unroll=unroll)
+        if cache is not None:
+            new_cache["mlstm"] = st
+        x = x + a
+    elif mixer == "slstm":
+        a, st = slstm_apply(p["slstm"], h, cfg.num_heads, ctx,
+                            state=None if cache is None else cache["slstm"])
+        if cache is not None:
+            new_cache["slstm"] = st
+        x = x + a
+    if enc_out is not None:
+        h = nn.apply_norm(x, p["norm_x"], cfg.norm_type)
+        a, _ = attention_apply(p["xattn"], h, positions, cfg, ctx, causal=False,
+                               cross_kv=enc_out)
+        x = x + a
+    if ffn in ("ffn", "moe"):
+        h = nn.apply_norm(x, p["norm2"], cfg.norm_type)
+        if ffn == "ffn":
+            x = x + ffn_apply(p["ffn"], h, cfg.mlp_type, ctx)
+        else:
+            y, aux = moe_apply(p["moe"], h, cfg.moe, cfg.mlp_type, ctx)
+            x = x + y
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    ctx: ShardCtx
+    unroll: bool = False
+    remat: bool = True
+    long_context: bool = False
+    # §Perf knobs (hillclimb levers; defaults = paper-faithful baseline)
+    remat_policy: str = "nothing"   # nothing | dots  (what the bwd may keep)
+    ssm_dtype: str = "float32"      # mamba scan tensor dtype (dA/dBx)
+
+    @property
+    def dtype(self):
+        return jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+
+    # ---- init -----------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg, dtype = self.cfg, self.dtype
+        kg = KeyGen(key)
+        V = padded_vocab(cfg)
+        params: dict[str, Any] = {
+            "embed": nn.embed_init(kg(), V, cfg.d_model, dtype),
+            "norm_f": nn.init_norm(cfg.norm_type, cfg.d_model, jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = nn.dense_init(
+                kg(), (cfg.d_model, V), ("embed", "vocab"), dtype)
+        cross = cfg.is_encdec
+        for gi, (unit, repeat) in enumerate(layer_groups(cfg)):
+            def init_unit(k, unit=unit):
+                ukg = KeyGen(k)
+                return {f"b{i}": _init_block(ukg, desc, cfg, dtype, cross=cross)
+                        for i, desc in enumerate(unit)}
+            base = kg()
+            keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(repeat))
+            params[f"group{gi}"] = nn.add_leading_axis(jax.vmap(init_unit)(keys))
+        if cfg.is_encdec:
+            for gi, (unit, repeat) in enumerate(layer_groups(cfg, encoder=True)):
+                def init_unit_e(k, unit=unit):
+                    ukg = KeyGen(k)
+                    return {f"b{i}": _init_block(ukg, desc, cfg, dtype, cross=False)
+                            for i, desc in enumerate(unit)}
+                base = kg()
+                keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(repeat))
+                params[f"enc_group{gi}"] = nn.add_leading_axis(jax.vmap(init_unit_e)(keys))
+            params["enc_norm_f"] = nn.init_norm(cfg.norm_type, cfg.d_model, jnp.float32)
+        return params
+
+    def abstract_params(self, key=None) -> dict:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, key)
+
+    def param_count(self, params=None) -> int:
+        params = params or self.abstract_params()
+        vals, _ = nn.split_params(params)
+        return sum(int(np.prod(v.shape)) for v in jax.tree_util.tree_leaves(vals))
+
+    # ---- stacks ----------------------------------------------------------
+    def _run_groups(self, params, x, positions, *, prefix="group", caches=None,
+                    cache_index=None, enc_out=None, causal=True):
+        cfg, ctx = self.cfg, self.ctx
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches: dict[str, Any] = {}
+        groups = layer_groups(cfg, encoder=(prefix == "enc_group"))
+        for gi, (unit, repeat) in enumerate(groups):
+            gp = params[f"{prefix}{gi}"]
+            gc = None if caches is None else caches[f"{prefix}{gi}"]
+
+            def unit_body(carry, xs):
+                xx, aux = carry
+                up, uc = xs
+                unew = {}
+                for i, desc in enumerate(unit):
+                    xx, nc, a = _apply_block(
+                        desc, up[f"b{i}"], xx, positions, cfg, ctx,
+                        cache=None if uc is None else uc[f"b{i}"],
+                        cache_index=cache_index, enc_out=enc_out, causal=causal,
+                        unroll=self.unroll, long_context=self.long_context,
+                        ssm_dtype=self.ssm_dtype)
+                    unew[f"b{i}"] = nc
+                    aux = aux + a
+                return (xx, aux), unew
+
+            body = unit_body
+            if self.remat:
+                policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                          if self.remat_policy == "dots"
+                          else jax.checkpoint_policies.nothing_saveable)
+                body = jax.checkpoint(unit_body, policy=policy)
+            (x, aux_total), nc_stack = jax.lax.scan(
+                body, (x, aux_total), (gp, gc),
+                unroll=repeat if self.unroll else 1)
+            new_caches[f"{prefix}{gi}"] = nc_stack
+        return x, aux_total, new_caches
+
+    def _embed_inputs(self, params, batch):
+        """tokens (+ modality stubs) -> (x [B,S,d], positions)."""
+        cfg, ctx = self.cfg, self.ctx
+        emb = params["embed"].value
+        tokens = batch["tokens"]
+        x = jnp.take(emb, tokens, axis=0)
+        if cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        if cfg.modality_stub == "image_patches" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        B, S = x.shape[0], x.shape[1]
+        if cfg.rope_type == "mrope" and "positions" in batch:
+            positions = batch["positions"]
+        else:
+            positions = positions_for(cfg, B, S)
+        x = ctx.constrain(x, ("batch", "seq", "embed"))
+        return x, positions
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = nn.apply_norm(x, params["norm_f"], cfg.norm_type)
+        if cfg.tie_embeddings:
+            w = params["embed"].value
+            logits = jnp.einsum("bsd,vd->bsv", x, w)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].value)
+        return self.ctx.constrain(logits.astype(jnp.float32), ("batch", "seq", "vocab"))
+
+    def _encode(self, params, batch):
+        cfg, ctx = self.cfg, self.ctx
+        frames = batch["frames"].astype(self.dtype)  # stub: precomputed embeddings
+        x = ctx.constrain(frames, ("batch", "seq", "embed"))
+        positions = positions_for(cfg, x.shape[0], x.shape[1])
+        x, _, _ = self._run_groups(params, x, positions, prefix="enc_group",
+                                   causal=False)
+        return nn.apply_norm(x, params["enc_norm_f"], cfg.norm_type)
+
+    # ---- training --------------------------------------------------------
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.is_encdec else None
+        x, positions = self._embed_inputs(params, batch)
+        x, aux, _ = self._run_groups(params, x, positions, enc_out=enc_out)
+        logits = self._logits(params, x)
+        targets = batch["targets"]
+        if logits.shape[1] != targets.shape[1]:  # vlm: patches prepended
+            logits = logits[:, -targets.shape[1]:]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        mask = (targets >= 0).astype(jnp.float32)
+        loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        if cfg.moe is not None:
+            loss = loss + 0.01 * aux
+        return loss, {"ce": loss, "aux": aux}
+
+    # ---- serving ---------------------------------------------------------
+    def init_cache(self, batch_size: int, cache_len: int) -> dict:
+        cfg, ctx = self.cfg, self.ctx
+        caches: dict[str, Any] = {}
+        for gi, (unit, repeat) in enumerate(layer_groups(cfg)):
+            def one(_):
+                return {f"b{i}": _init_cache_block(desc, cfg, batch_size, cache_len,
+                                                   ctx, self.dtype, cross=cfg.is_encdec)
+                        for i, desc in enumerate(unit)}
+            caches[f"group{gi}"] = jax.vmap(one)(jnp.arange(repeat))
+        return caches
+
+    def prefill(self, params, batch, cache_len: int):
+        """Returns (last-position logits, caches, enc_out|None)."""
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.is_encdec else None
+        x, positions = self._embed_inputs(params, batch)
+        caches = self.init_cache(x.shape[0], cache_len)
+        x, _, new_caches = self._run_groups(params, x, positions, caches=caches,
+                                            enc_out=enc_out)
+        logits = self._logits(params, x[:, -1:])
+        return logits, new_caches, enc_out
+
+    def decode_step(self, params, caches, tokens, pos, enc_out=None):
+        """tokens: [B, 1]; pos: scalar int32 (uniform across batch)."""
+        cfg, ctx = self.cfg, self.ctx
+        emb = params["embed"].value
+        x = jnp.take(emb, tokens, axis=0)
+        if cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        x = ctx.constrain(x, ("batch", "seq", "embed"))
+        positions = positions_for(cfg, x.shape[0], 1, offset=pos)
+        x, _, new_caches = self._run_groups(params, x, positions, caches=caches,
+                                            cache_index=pos, enc_out=enc_out)
+        logits = self._logits(params, x)
+        return logits, new_caches
+
+
+def build_model(cfg: ArchConfig, ctx: ShardCtx | None = None, **kw) -> Model:
+    return Model(cfg, ctx if ctx is not None else ShardCtx(None, {}, {}), **kw)

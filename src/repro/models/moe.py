@@ -1,0 +1,240 @@
+"""Mixture-of-Experts with expert parallelism (EP) over the 'experts' axis.
+
+This is the LM-side embodiment of GraphMP's selective scheduling (DESIGN.md
+§5): the router's top-k assignment marks which "shards" (experts) can produce
+updates for a token; only those are touched.  Dispatch is capacity-bounded
+(tokens above capacity are dropped, MaxText-style) and sort-based — no
+[T, E, C] one-hot tensor, which would be astronomically large for kimi's 384
+experts.
+
+Two execution paths with identical math:
+  * local  — experts resident on every device (smoke tests / no mesh):
+             batched GEMM over [E, C, d].
+  * EP     — experts sharded over the 'experts' rule (mesh 'model' axis):
+             shard_map with all_to_all to move token slots to their expert's
+             device and back.  The all_to_all pair is the collective the
+             roofline attributes to the paper's technique.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.dist.context import ShardCtx
+from repro.models import nn
+from repro.models.nn import KeyGen, Param
+
+
+def init_moe(kg: KeyGen, d: int, moe: MoEConfig, mlp_type: str, dtype) -> dict:
+    E, f = moe.num_experts, moe.d_ff_expert
+    p = {
+        "router": nn.dense_init(kg(), (d, E), ("embed", "experts"), jnp.float32),
+        "w_up": nn.dense_init(kg(), (E, d, f), ("experts", "embed", "expert_ff"), dtype),
+        "w_down": nn.dense_init(kg(), (E, f, d), ("experts", "expert_ff", "embed"), dtype),
+    }
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = nn.dense_init(kg(), (E, d, f), ("experts", "embed", "expert_ff"), dtype)
+    if moe.num_shared_experts:
+        from repro.models.ffn import init_ffn
+        p["shared"] = init_ffn(kg, d, f * moe.num_shared_experts, mlp_type, dtype)
+    return p
+
+
+def _expert_ffn(p: dict, xe, mlp_type: str):
+    """xe: [E, C, d] -> [E, C, d] (batched per-expert GEMMs)."""
+    if mlp_type in ("swiglu", "geglu"):
+        gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].value)
+        up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].value)
+        gate = jax.nn.silu(gate) if mlp_type == "swiglu" else jax.nn.gelu(gate)
+        h = gate * up
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["w_up"].value))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].value)
+
+
+def _route(router, xf, moe: MoEConfig, capacity: int):
+    """Sort-based capacity dispatch.
+
+    xf: [T, d] -> (dispatch_idx [E, C] int32 (token idx or -1),
+                   combine_w   [E, C] float32)
+    """
+    T = xf.shape[0]
+    E, k = moe.num_experts, moe.top_k
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)           # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    flat_e = top_e.reshape(-1)                        # [T*k]
+    flat_w = top_w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e)                       # group by expert
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each slot within its expert group
+    start = jnp.searchsorted(se, jnp.arange(E))       # [E]
+    pos = jnp.arange(T * k) - start[se]
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, E * capacity)  # overflow bin
+    dispatch_idx = jnp.full((E * capacity + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(keep, st, -1).astype(jnp.int32))[: E * capacity].reshape(E, capacity)
+    combine_w = jnp.zeros((E * capacity + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sw, 0.0))[: E * capacity].reshape(E, capacity)
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.bincount(flat_e, length=E) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    return dispatch_idx, combine_w, aux
+
+
+def moe_apply(p: dict, x, moe: MoEConfig, mlp_type: str, ctx: ShardCtx):
+    """x: [B, S, d] -> ([B, S, d], aux_loss)."""
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    T = B * S
+    ep = ctx.axis_size("experts")
+    # EP needs the expert count to divide the mesh axis (kimi 384, jamba 16);
+    # otherwise fall back to TP-MoE: experts replicated, expert matrices
+    # sharded on d_ff (mixtral's 8 experts on a 16-way axis).
+    use_ep = ep > 1 and moe.num_experts % ep == 0
+    # 'replicated' EP requires tokens to be replicated over the EP axis —
+    # true when experts shard over 'model', false for the serve 2-D layout
+    # where experts shard over 'data' (the token axis).
+    ep_axis = ctx.rules.get("experts")
+    dp = ctx.rules.get("batch") or ()
+    dp_flat = (dp,) if isinstance(dp, str) else tuple(dp)
+    replicated_ok = ep_axis not in dp_flat
+
+    if use_ep and ctx.ep_mode == "replicated" and replicated_ok:
+        y, aux = _moe_ep_replicated(p, xf, moe, mlp_type, ctx)
+    elif use_ep:
+        y, aux = _moe_ep(p, xf, moe, mlp_type, ctx)
+    else:
+        cap = max(-(-int(moe.capacity_factor * T * moe.top_k) // moe.num_experts), 1)
+        dispatch_idx, combine_w, aux = _route(p["router"].value, xf, moe, cap)
+        safe = jnp.maximum(dispatch_idx, 0)
+        xe = xf[safe] * (dispatch_idx >= 0)[..., None].astype(x.dtype)  # [E, C, d]
+        ye = _expert_ffn(p, xe, mlp_type)
+        y = _combine(ye, dispatch_idx, combine_w, T, x.dtype)
+
+    if "shared" in p:
+        from repro.models.ffn import ffn_apply
+        y = y + ffn_apply(p["shared"], x, mlp_type, ctx).reshape(T, d)
+    return y.reshape(B, S, d), aux
+
+
+def _combine(ye, dispatch_idx, combine_w, T, dtype):
+    """Scatter-add expert outputs back to token order with routing weights."""
+    w = combine_w[..., None].astype(ye.dtype)
+    flat_idx = jnp.where(dispatch_idx >= 0, dispatch_idx, T).reshape(-1)
+    contrib = (ye * w).reshape(-1, ye.shape[-1])
+    y = jnp.zeros((T + 1, ye.shape[-1]), ye.dtype).at[flat_idx].add(contrib)
+    return y[:T].astype(dtype)
+
+
+def _moe_ep(p, xf, moe: MoEConfig, mlp_type, ctx: ShardCtx):
+    """Expert-parallel path (DP×EP grid, DeepSpeed-MoE style).
+
+    Tokens stay sharded over the data axes; each device routes its *local*
+    tokens (so dispatch buffers scale with T_local, not global T — essential
+    for kimi's 384 experts), then a pair of all_to_alls over the 'experts'
+    mesh axis moves capacity slots to expert owners and back.
+    """
+    mesh = ctx.mesh
+    axis = ctx.rules.get("experts")
+    dp = ctx.rules.get("batch")
+    # optional second-level TP on the expert ff dim (serve 2-D layout, §Perf)
+    ff_axis = ctx.weight_rules.get("expert_ff")
+    ff_axis = ff_axis if isinstance(ff_axis, str) and ff_axis != axis else None
+    E = moe.num_experts
+    T, d = xf.shape
+    dp_size = ctx.axis_size("batch")
+    T_local = T // max(dp_size, 1)
+    cap = max(-(-int(moe.capacity_factor * T_local * moe.top_k) // E), 1)
+    wg = p.get("w_gate")
+
+    def local(xf_b, router, wg_b, wu, wd):
+        di, cw, aux = _route(router, xf_b, moe, cap)
+        safe = jnp.maximum(di, 0)
+        xe = xf_b[safe] * (di >= 0)[..., None].astype(xf_b.dtype)  # [E, C, d]
+        xe = jax.lax.all_to_all(xe, axis, split_axis=0, concat_axis=1, tiled=True)
+        sub = {"w_up": Param(wu, None), "w_down": Param(wd, None)}
+        if wg is not None:
+            sub["w_gate"] = Param(wg_b, None)
+        ye = _expert_ffn(sub, xe, mlp_type)
+        if ff_axis is not None:  # down-proj contracted a sharded ff dim
+            ye = jax.lax.psum(ye, ff_axis)
+        ye = jax.lax.all_to_all(ye, axis, split_axis=1, concat_axis=0, tiled=True)
+        y = _combine(ye, di, cw, xf_b.shape[0], xf_b.dtype)
+        if dp is not None:
+            aux = jax.lax.pmean(aux, dp)
+        return y, aux
+
+    w_up_spec = P(axis, None, ff_axis)
+    w_dn_spec = P(axis, ff_axis, None)
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp), P(), w_up_spec if wg is not None else P(),
+                  w_up_spec, w_dn_spec),
+        out_specs=(P(dp), P()),
+        check_vma=False,
+    )
+    y, aux = fn(xf, p["router"].value,
+                wg.value if wg is not None else jnp.zeros((), xf.dtype),
+                p["w_up"].value, p["w_down"].value)
+    return y, aux
+
+
+def _moe_ep_replicated(p, xf, moe: MoEConfig, mlp_type, ctx: ShardCtx):
+    """No-token-movement EP (§Perf iteration): activations are already
+    replicated over the 'experts' mesh axis (tokens shard over batch/data
+    only), so moving them with all_to_all is pure waste.  Each device routes
+    the local tokens, gathers capacity slots for its OWN E/ep experts
+    directly from its resident copy of x, runs the expert GEMMs, scatters
+    into a local partial y, and a single psum over the EP axis combines.
+
+    Wire bytes per layer: 2 × T_local·d (psum) instead of
+    2 × E·C·d ≈ 2 × T_local·d·top_k·capacity_factor (a2a) — a ~2·k·cf×
+    reduction (20× for kimi's top-8 @ cf 1.25).
+    """
+    mesh = ctx.mesh
+    axis = ctx.rules.get("experts")
+    dp = ctx.rules.get("batch")
+    E = moe.num_experts
+    ep = ctx.axis_size("experts")
+    E_local = E // ep
+    T, d = xf.shape
+    dp_size = ctx.axis_size("batch")
+    T_local = T // max(dp_size, 1)
+    cap = max(-(-int(moe.capacity_factor * T_local * moe.top_k) // E), 1)
+    wg = p.get("w_gate")
+
+    def local(xf_b, router, wg_b, wu, wd):
+        di, cw, aux = _route(router, xf_b, moe, cap)  # full dispatch, local
+        me = jax.lax.axis_index(axis)
+        sl = me * E_local
+        di_loc = jax.lax.dynamic_slice(di, (sl, 0), (E_local, cap))
+        cw_loc = jax.lax.dynamic_slice(cw, (sl, 0), (E_local, cap))
+        safe = jnp.maximum(di_loc, 0)
+        xe = xf_b[safe] * (di_loc >= 0)[..., None].astype(xf_b.dtype)
+        sub = {"w_up": Param(wu, None), "w_down": Param(wd, None)}
+        if wg is not None:
+            sub["w_gate"] = Param(wg_b, None)
+        ye = _expert_ffn(sub, xe, mlp_type)
+        y_part = _combine(ye, di_loc, cw_loc, xf_b.shape[0], jnp.float32)
+        y = jax.lax.psum(y_part, axis).astype(xf_b.dtype)
+        if dp is not None:
+            aux = jax.lax.pmean(aux, dp)
+        return y, aux
+
+    specs_w = P(axis)
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp), P(), specs_w if wg is not None else P(), specs_w, specs_w),
+        out_specs=(P(dp), P()),
+        check_vma=False,
+    )
+    y, aux = fn(xf, p["router"].value,
+                wg.value if wg is not None else jnp.zeros((), xf.dtype),
+                p["w_up"].value, p["w_down"].value)
+    return y, aux

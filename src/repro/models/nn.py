@@ -1,0 +1,122 @@
+"""Minimal parameter/module substrate (no flax): Param-annotated pytrees.
+
+Every parameter is a ``Param(value, axes)`` where ``axes`` names the logical
+axis of each dim ('embed', 'ffn', 'q_heads', ...).  ``split_params`` peels the
+annotations off into a parallel tree used by dist/rules.py to derive
+NamedShardings; ``jax.eval_shape`` over an ``init`` gives the abstract
+(ShapeDtypeStruct) tree the dry-run lowers against — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = tuple[str | None, ...]
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any  # jax.Array | ShapeDtypeStruct
+    axes: Axes
+
+    def __repr__(self) -> str:  # keep test output readable
+        return f"Param({getattr(self.value, 'shape', ())}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, v: Param(v[0], axes),
+)
+
+
+def split_params(tree):
+    """Param tree -> (values tree, axes tree) with identical structure."""
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, Param))
+    values = jax.tree_util.tree_map(lambda p: p.value, tree,
+                                    is_leaf=lambda x: isinstance(x, Param))
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree,
+                                  is_leaf=lambda x: isinstance(x, Param))
+    del leaves
+    return values, axes
+
+
+def merge_params(values, axes):
+    return jax.tree_util.tree_map(lambda v, a: Param(v, a), values, axes,
+                                  is_leaf=lambda x: x is None)
+
+
+def add_leading_axis(tree, name: str = "layers"):
+    """After vmap-stacking layer params, annotate the new leading dim."""
+    return jax.tree_util.tree_map(
+        lambda p: Param(p.value, (name,) + tuple(p.axes)),
+        tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def dense_init(key, shape: tuple[int, ...], axes: Axes, dtype=jnp.float32,
+               scale: float | None = None) -> Param:
+    fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    std = scale if scale is not None else fan_in ** -0.5
+    return Param(jax.random.normal(key, shape, dtype) * std, axes)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Param:
+    return Param(jax.random.normal(key, (vocab, d), dtype) * (d ** -0.5),
+                 ("vocab", "embed"))
+
+
+def ones_init(shape: tuple[int, ...], axes: Axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+def zeros_init(shape: tuple[int, ...], axes: Axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+class KeyGen:
+    """Deterministic per-path PRNG splitting."""
+
+    def __init__(self, key):
+        self.key = key
+        self._n = 0
+
+    def __call__(self):
+        self._n += 1
+        return jax.random.fold_in(self.key, self._n)
+
+
+# --------------------------------------------------------------------------
+# numerics
+# --------------------------------------------------------------------------
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(x.dtype)
+
+
+def apply_norm(x, p: dict, norm_type: str):
+    if norm_type == "layernorm":
+        return layer_norm(x, p["gamma"].value, p["beta"].value)
+    return rms_norm(x, p["gamma"].value)
+
+
+def init_norm(norm_type: str, d: int, dtype=jnp.float32) -> dict:
+    if norm_type == "layernorm":
+        return {"gamma": ones_init((d,), (None,), dtype),
+                "beta": zeros_init((d,), (None,), dtype)}
+    return {"gamma": zeros_init((d,), (None,), dtype)}  # (1+gamma) rmsnorm

@@ -1,0 +1,148 @@
+"""Mamba (selective SSM) block for the Jamba hybrid — chunked-parallel form.
+
+Training/prefill uses a chunked linear-recurrence: the sequence is split into
+chunks; within a chunk the recurrence h_t = dA_t ⊙ h_{t-1} + dB_t x_t is
+solved with an associative scan (parallel, unrollable for the roofline delta
+method); chunk boundary states are carried by an outer lax.scan.  Decode is
+the O(1) recurrent step on carried (conv_state, ssm_state).
+
+On real TPU the inner scan would be a Pallas kernel (the SSD/mamba-2 style
+block); the chunked structure here is exactly the tiling that kernel uses,
+so the roofline terms are representative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig
+from repro.dist.context import ShardCtx
+from repro.models import nn
+from repro.models.nn import KeyGen
+
+
+def d_inner_of(d_model: int, mc: MambaConfig) -> int:
+    return mc.expand * d_model
+
+
+def dt_rank_of(d_model: int, mc: MambaConfig) -> int:
+    return mc.dt_rank or -(-d_model // 16)
+
+
+def init_mamba(kg: KeyGen, d: int, mc: MambaConfig, dtype) -> dict:
+    di = d_inner_of(d, mc)
+    dtr = dt_rank_of(d, mc)
+    N = mc.d_state
+    return {
+        "in_proj": nn.dense_init(kg(), (d, 2 * di), ("embed", "mamba_inner"), dtype),
+        "conv_w": nn.dense_init(kg(), (mc.d_conv, di), (None, "mamba_inner"), dtype, scale=0.5),
+        "conv_b": nn.zeros_init((di,), ("mamba_inner",), dtype),
+        "x_proj": nn.dense_init(kg(), (di, dtr + 2 * N), ("mamba_inner", None), dtype),
+        "dt_proj": nn.dense_init(kg(), (dtr, di), (None, "mamba_inner"), dtype),
+        "dt_bias": nn.zeros_init((di,), ("mamba_inner",), dtype),
+        "A_log": nn.Param(
+            jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+            ("mamba_inner", "state")),
+        "D": nn.ones_init((di,), ("mamba_inner",), dtype),
+        "out_proj": nn.dense_init(kg(), (di, d), ("mamba_inner", "embed"), dtype),
+    }
+
+
+def _ssm_scan_chunked(dA, dBx, Cs, h0, chunk: int, unroll: bool):
+    """y_t = C_t · h_t with h_t = dA_t ⊙ h_{t-1} + dBx_t.
+
+    The [B, S, di, N] state sequence is never materialized across the whole
+    sequence — only within one chunk (the VSW memory discipline again: tiny
+    resident state, streamed long axis).  Returns (y [B,S,di], h_last).
+    """
+    B, S, di, N = dA.shape
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:  # identity steps: dA=1, dBx=0 leave the state unchanged
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+    dA_c = dA.reshape(B, nc, Q, di, N).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(B, nc, Q, di, N).transpose(1, 0, 2, 3, 4)
+    Cs_c = Cs.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, blk):
+        a, bx, c = blk  # [B, Q, di, N], [B, Q, N]
+        # prefix products within the chunk via associative scan (parallel)
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        pa, pb = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        h_all = pa * h[:, None] + pb        # [B, Q, di, N] (chunk transient)
+        y = jnp.einsum("bqin,bqn->bqi", h_all, c)
+        return h_all[:, -1], y
+
+    h_last, y_chunks = jax.lax.scan(chunk_body, h0, (dA_c, dBx_c, Cs_c),
+                                    unroll=nc if unroll else 1)
+    y = y_chunks.transpose(1, 0, 2, 3).reshape(B, nc * Q, di)[:, :S]
+    return y, h_last
+
+
+def mamba_apply(p: dict, x, mc: MambaConfig, ctx: ShardCtx, *,
+                state: dict | None = None, unroll: bool = False,
+                chunk: int = 256, scan_dtype: str = "float32"):
+    """x: [B, S, d] -> (y, new_state).  state carries (conv, ssm) for decode.
+
+    ``scan_dtype='bfloat16'`` keeps the big [B,S,di,N] discretization tensors
+    in bf16 (halving the dominant HBM traffic — §Perf); the recurrence carry
+    stays f32 for stability, validated by tests/test_perf_variants.py."""
+    B, S, d = x.shape
+    di = p["D"].value.shape[0]
+    N = p["A_log"].value.shape[1]
+    dc = p["conv_w"].value.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].value)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xr = ctx.constrain(xr, ("batch", "seq", "mamba_inner"))
+
+    # causal depthwise conv over the sequence
+    if state is not None and S == 1:
+        conv_in = jnp.concatenate([state["conv"], xr], axis=1)  # [B, dc, di]
+        new_conv = conv_in[:, 1:]
+        # same op order as the S>1 path => bit-identical in bf16
+        xc = sum(conv_in[:, i : i + 1] * p["conv_w"].value[i] for i in range(dc))
+    else:
+        pad = jnp.zeros((B, dc - 1, di), xr.dtype) if state is None else state["conv"]
+        conv_in = jnp.concatenate([pad, xr], axis=1)
+        new_conv = conv_in[:, -(dc - 1):]
+        xc = sum(
+            conv_in[:, i : i + S] * p["conv_w"].value[i]
+            for i in range(dc)
+        )
+    xc = jax.nn.silu(xc + p["conv_b"].value)
+
+    dtr = p["dt_proj"].value.shape[0]
+    xdb = jnp.einsum("bsi,ie->bse", xc, p["x_proj"].value)
+    dt, Bs, Cs = jnp.split(xdb, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"].value)
+                         + p["dt_bias"].value)
+    A = -jnp.exp(p["A_log"].value.astype(jnp.float32))  # [di, N]
+    sdt = jnp.bfloat16 if scan_dtype == "bfloat16" else jnp.float32
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A).astype(sdt)     # [B,S,di,N]
+    dBx = ((dt * xc)[..., None].astype(jnp.float32)
+           * Bs[:, :, None, :].astype(jnp.float32)).astype(sdt)
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((B, di, N), jnp.float32)
+    if S == 1:
+        h_last = dA[:, 0] * h0 + dBx[:, 0]
+        y = jnp.einsum("bin,bn->bi", h_last, Cs[:, 0].astype(jnp.float32))[:, None]
+    else:
+        y, h_last = _ssm_scan_chunked(dA, dBx, Cs.astype(jnp.float32), h0, chunk, unroll)
+    y = y.astype(x.dtype) + xc * p["D"].value
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].value)
+    new_state = {"conv": new_conv, "ssm": h_last}
+    return ctx.constrain(out, ("batch", "seq", "embed")), new_state
+
+
+def init_mamba_state(cfg, batch: int, dtype) -> dict:
+    mc = cfg.mamba
+    di = d_inner_of(cfg.d_model, mc)
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+    }

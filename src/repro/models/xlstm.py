@@ -1,0 +1,233 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunk-parallel)
+and sLSTM (scalar memory, strictly sequential recurrence).
+
+mLSTM trains in a chunkwise linear-attention form.  With F_t = Σ_{r≤t} log f_r
+(within-chunk) and inbound stabilized state (C̃, ñ, m_in):
+
+  D_tj   = exp(F_t - F_j + log i_j)          (intra-chunk pair decay, j ≤ t)
+  m_t    = max(max_j log D_tj, F_t + m_in)   (stabilizer)
+  num_t  = Σ_j e^{logD-m_t} (q·k_j) v_j + e^{F_t+m_in-m_t} q·C̃
+  den_t  = Σ_j e^{logD-m_t} (q·k_j)     + e^{F_t+m_in-m_t} q·ñ
+  y_t    = num_t / max(|den_t|, e^{-m_t})
+
+which reduces to the O(1) decode step at chunk length 1.  The chunk scan is
+unrollable for the roofline delta method.  sLSTM keeps a true sequential
+scan (its gates feed back through h_{t-1}); the roofline harness accounts its
+FLOPs as step-program-FLOPs × S (EXPERIMENTS.md §Roofline-method).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.dist.context import ShardCtx
+from repro.models import nn
+from repro.models.nn import KeyGen
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+def init_mlstm(kg: KeyGen, d: int, num_heads: int, xc: XLSTMConfig, dtype) -> dict:
+    di = int(d * xc.proj_factor_mlstm)
+    bs = min(xc.qkv_blocksize, di)
+    nb = di // bs
+    return {
+        "up": nn.dense_init(kg(), (d, 2 * di), ("embed", "mamba_inner"), dtype),
+        # block-diagonal projections (paper's qkv_proj_blocksize): [nb, bs, bs]
+        "wq": nn.dense_init(kg(), (nb, bs, bs), ("mamba_inner", None, None), dtype),
+        "wk": nn.dense_init(kg(), (nb, bs, bs), ("mamba_inner", None, None), dtype),
+        "wv": nn.dense_init(kg(), (nb, bs, bs), ("mamba_inner", None, None), dtype),
+        "wi": nn.dense_init(kg(), (di, num_heads), (None, "lstm_heads"), jnp.float32, scale=0.01),
+        "wf": nn.dense_init(kg(), (di, num_heads), (None, "lstm_heads"), jnp.float32, scale=0.01),
+        "bi": nn.zeros_init((num_heads,), ("lstm_heads",), jnp.float32),
+        "bf": nn.Param(jnp.full((num_heads,), 3.0, jnp.float32), ("lstm_heads",)),
+        "ogate": nn.dense_init(kg(), (d, di), ("embed", "mamba_inner"), dtype),
+        "down": nn.dense_init(kg(), (di, d), ("mamba_inner", "embed"), dtype),
+    }
+
+
+def init_mlstm_state(B: int, H: int, hd: int) -> dict:
+    return {
+        "C": jnp.zeros((B, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, H, hd), jnp.float32),
+        "m": jnp.full((B, H), NEG, jnp.float32),
+    }
+
+
+def _mlstm_step(q, k, v, li, lf, state):
+    """Single recurrent step (decode).  q/k/v: [B,H,hd]; li/lf: [B,H] (log)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    f = jnp.exp(lf + m - m_new)[..., None]
+    i = jnp.exp(li - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C_new = f[..., None] * C + (i * kf)[..., None] * vf[..., None, :]
+    n_new = f * n + i * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C_new)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_new))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def _mlstm_chunked(q, k, v, li, lf, state, chunk: int, unroll: bool):
+    """[B,S,H,hd] inputs -> (y [B,S,H,hd], final state)."""
+    B, S, H, hd = q.shape
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:  # identity steps: i-gate -inf (no write), f-gate 0 (no decay)
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, zpad) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(t):
+        perm = (1, 0) + tuple(range(2, t.ndim + 1))
+        return t.reshape(B, nc, Q, *t.shape[2:]).transpose(*perm)
+
+    qc, kc, vc, lic, lfc = map(to_chunks, (q, k, v, li, lf))
+
+    def chunk_body(carry, blk):
+        C, n, m = carry                       # stabilized inbound state
+        qb, kb, vb, lib, lfb = blk            # [B,Q,H,hd], gates [B,Q,H]
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        F = jnp.cumsum(lfb, axis=1)           # [B,Q,H]
+        g = F[:, :, None, :] - F[:, None, :, :] + lib[:, None, :, :]  # [B,t,j,H]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        g = jnp.where(causal[None, :, :, None], g, NEG)
+        a_state = F + m[:, None]              # [B,Q,H]
+        m_t = jnp.maximum(jnp.max(g, axis=2), a_state)
+        w = jnp.exp(g - m_t[:, :, None, :])
+        s = jnp.einsum("bthk,bjhk->btjh", qf, kf)
+        sw = s * w
+        dec = jnp.exp(a_state - m_t)          # [B,Q,H]
+        num = jnp.einsum("btjh,bjhv->bthv", sw, vf) \
+            + jnp.einsum("bthk,bhkv->bthv", qf, C) * dec[..., None]
+        den = sw.sum(axis=2) + jnp.einsum("bthk,bhk->bth", qf, n) * dec
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # outbound state (stabilized at m_out)
+        gQ = g[:, -1]                          # [B,j,H] log decay to chunk end
+        m_out = jnp.maximum(a_state[:, -1], jnp.max(gQ, axis=1))
+        wq = jnp.exp(gQ - m_out[:, None])      # [B,j,H]
+        decQ = jnp.exp(a_state[:, -1] - m_out)
+        C_out = decQ[..., None, None] * C + jnp.einsum("bjh,bjhk,bjhv->bhkv", wq, kf, vf)
+        n_out = decQ[..., None] * n + jnp.einsum("bjh,bjhk->bhk", wq, kf)
+        return (C_out, n_out, m_out), y
+
+    (C, n, m), y = jax.lax.scan(chunk_body, (state["C"], state["n"], state["m"]),
+                                (qc, kc, vc, lic, lfc), unroll=nc if unroll else 1)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, hd)[:, :S]
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_apply(p: dict, x, num_heads: int, xc: XLSTMConfig, ctx: ShardCtx, *,
+                state: dict | None = None, unroll: bool = False):
+    """x: [B, S, d] -> (y, new_state)."""
+    B, S, d = x.shape
+    up = jnp.einsum("bsd,de->bse", x, p["up"].value)
+    xr, res = jnp.split(up, 2, axis=-1)
+    di = xr.shape[-1]
+    H = num_heads
+    hd = di // H
+    nb, bs = p["wq"].value.shape[0], p["wq"].value.shape[1]
+
+    def blockdiag(t, w):  # [B,S,di] x [nb,bs,bs] -> [B,S,di], then head split
+        y = jnp.einsum("bsnk,nkl->bsnl", t.reshape(B, S, nb, bs), w)
+        return y.reshape(B, S, H, hd)
+
+    q = blockdiag(xr, p["wq"].value) * hd ** -0.5
+    k = blockdiag(xr, p["wk"].value)
+    v = blockdiag(xr, p["wv"].value)
+    li = jnp.einsum("bsi,ih->bsh", xr.astype(jnp.float32), p["wi"].value) + p["bi"].value
+    lf = jnp.einsum("bsi,ih->bsh", xr.astype(jnp.float32), p["wf"].value) + p["bf"].value
+    lf = jax.nn.log_sigmoid(lf)
+    if state is None:
+        state = init_mlstm_state(B, H, hd)
+    if S == 1:
+        y, new_state = _mlstm_step(q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0], state)
+        y = y[:, None]
+    else:
+        y, new_state = _mlstm_chunked(q, k, v, li, lf, state, xc.chunk_size, unroll)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(jnp.einsum("bsd,de->bse", x, p["ogate"].value))
+    y = y + res
+    out = jnp.einsum("bsi,id->bsd", y, p["down"].value)
+    return ctx.constrain(out, ("batch", "seq", "embed")), new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+def init_slstm(kg: KeyGen, d: int, num_heads: int, xc: XLSTMConfig, dtype) -> dict:
+    dh = d // num_heads
+    dff = int(d * xc.proj_factor_slstm)
+    return {
+        "wx": nn.dense_init(kg(), (d, 4, d), ("embed", None, "mamba_inner"), dtype),
+        "r": nn.dense_init(kg(), (num_heads, dh, 4, dh),
+                           ("lstm_heads", None, None, None), dtype, scale=dh ** -0.5),
+        "b": nn.Param(
+            jnp.zeros((4, d), jnp.float32).at[1].set(3.0),  # forget-gate bias 3
+            (None, "mamba_inner")),
+        "up": nn.dense_init(kg(), (d, 2 * dff), ("embed", "ffn"), dtype),
+        "down": nn.dense_init(kg(), (dff, d), ("ffn", "embed"), dtype),
+    }
+
+
+def init_slstm_state(B: int, d: int) -> dict:
+    z = jnp.zeros((B, d), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z + NEG}
+
+
+def _slstm_step(xproj, r, state, num_heads: int):
+    """xproj: [B, 4, d] precomputed input projection; recurrent part here."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    B, _, d = xproj.shape
+    dh = d // num_heads
+    hh = h.reshape(B, num_heads, dh)
+    rec = jnp.einsum("bhk,hkgl->bghl", hh.astype(r.dtype), r).reshape(B, 4, d)
+    gates = xproj.astype(jnp.float32) + rec.astype(jnp.float32)
+    li, lf, z, o = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+    lf = jax.nn.log_sigmoid(lf)
+    m_new = jnp.maximum(lf + m, li)
+    f = jnp.exp(lf + m - m_new)
+    i = jnp.exp(li - m_new)
+    c_new = f * c + i * jnp.tanh(z)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(p: dict, x, num_heads: int, ctx: ShardCtx, *,
+                state: dict | None = None):
+    """x: [B, S, d] -> (y, new_state).  Sequential over S (true recurrence)."""
+    B, S, d = x.shape
+    xproj = jnp.einsum("bsd,dge->bsge", x, p["wx"].value) + p["b"].value
+    if state is None:
+        state = init_slstm_state(B, d)
+    if S == 1:
+        h, new_state = _slstm_step(xproj[:, 0], p["r"].value, state, num_heads)
+        hs = h[:, None]
+    else:
+        def body(st, xp):
+            h, st2 = _slstm_step(xp, p["r"].value, st, num_heads)
+            return st2, h
+        new_state, hs = jax.lax.scan(body, state, xproj.transpose(1, 0, 2, 3))
+        hs = hs.transpose(1, 0, 2)
+    hs = hs.astype(x.dtype)
+    # gated up/down projection FFN (proj factor 4/3)
+    gate, up = jnp.split(jnp.einsum("bsd,df->bsf", hs, p["up"].value), 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(gate) * up, p["down"].value)
+    return ctx.constrain(y, ("batch", "seq", "embed")), new_state
+
+
+def slstm_step_flops(d: int, num_heads: int) -> int:
+    """Analytic per-step FLOPs of the recurrent part (for §Roofline)."""
+    dh = d // num_heads
+    return 2 * num_heads * dh * 4 * dh + 12 * d  # recurrent matvec + gates

@@ -1,0 +1,69 @@
+"""Batched serving engine: prefill once, decode greedily/with temperature.
+
+The KV caches / recurrent states are the resident "vertex arrays" of the VSW
+mapping (DESIGN.md §5): they live on-device for the whole request batch, and
+each decode step is a pull-mode update against them.  serve_step (= one
+decode step) is what the decode_* / long_* dry-run shapes lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_seconds: float
+    decode_seconds: float
+    tokens_generated: int
+
+    @property
+    def tokens_per_second(self) -> float:
+        return self.tokens_generated / max(self.decode_seconds, 1e-9)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, batch: dict, *, num_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0) -> tuple[np.ndarray, ServeStats]:
+        t0 = time.time()
+        prompt_len = batch["tokens"].shape[1]
+        extra = batch["patches"].shape[1] if "patches" in batch else 0
+        logits, caches, enc_out = self.model.prefill(
+            self.params, batch, cache_len=prompt_len + extra + num_tokens)
+        jax.block_until_ready(logits)
+        t1 = time.time()
+        B = batch["tokens"].shape[0]
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits[:, 0], temperature, key)
+        out.append(tok)
+        pos = prompt_len + extra
+        for i in range(num_tokens - 1):
+            logits, caches = self._decode(self.params, caches, tok[:, None],
+                                          jnp.asarray(pos + i, jnp.int32),
+                                          enc_out=enc_out)
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits[:, 0], temperature, key)
+            out.append(tok)
+        toks = np.stack([np.asarray(t) for t in out], axis=1)
+        t2 = time.time()
+        return toks, ServeStats(prefill_seconds=t1 - t0, decode_seconds=t2 - t1,
+                                tokens_generated=B * num_tokens)
+
+    @staticmethod
+    def _sample(logits, temperature: float, key):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptConfig, init_opt_state, apply_updates, lr_at  # noqa: F401
+from repro.train.train_step import TrainState, make_train_step, make_init_state  # noqa: F401

@@ -1,0 +1,152 @@
+"""Optimizers from scratch (no optax in this container): AdamW + Adafactor.
+
+State trees mirror the param tree (Param-shaped), so the FSDP weight
+shardings apply verbatim to optimizer state — "all vertices in memory,
+sharded" (the VSW discipline applied to optimizer state).
+
+Adafactor (factored second moments over the last two dims) exists because
+kimi-k2's 1T parameters cannot afford 2×fp32 Adam moments on a 256-chip pod —
+EXPERIMENTS.md §Dry-run quantifies this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.nn import Param
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    # mixed precision: keep fp32 master weights when params are bf16
+    master_fp32: bool = True
+    # adafactor
+    factored_min_dim: int = 128
+
+
+def lr_at(cfg: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _is_param(x):
+    return isinstance(x, Param)
+
+
+def _map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees, is_leaf=_is_param)
+
+
+def _factored(shape, min_dim: int) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def init_opt_state(params, cfg: OptConfig) -> dict:
+    """Param tree -> state tree.  Leaves are Param-wrapped so shardings map."""
+
+    def adam_leaf(p: Param):
+        st = {
+            "m": Param(jnp.zeros(p.value.shape, jnp.float32), p.axes),
+            "v": Param(jnp.zeros(p.value.shape, jnp.float32), p.axes),
+        }
+        if cfg.master_fp32 and p.value.dtype != jnp.float32:
+            st["master"] = Param(p.value.astype(jnp.float32), p.axes)
+        return st
+
+    def adafactor_leaf(p: Param):
+        sh = p.value.shape
+        st: dict[str, Any] = {}
+        if _factored(sh, cfg.factored_min_dim):
+            st["vr"] = Param(jnp.zeros(sh[:-1], jnp.float32), p.axes[:-1])
+            st["vc"] = Param(jnp.zeros(sh[:-2] + sh[-1:], jnp.float32),
+                             p.axes[:-2] + p.axes[-1:])
+        else:
+            st["v"] = Param(jnp.zeros(sh, jnp.float32), p.axes)
+        if cfg.master_fp32 and p.value.dtype != jnp.float32:
+            st["master"] = Param(p.value.astype(jnp.float32), p.axes)
+        return st
+
+    leaf = adam_leaf if cfg.name == "adamw" else adafactor_leaf
+    return {"step": jnp.zeros((), jnp.int32), "ema": _map(leaf, params)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(_map(lambda p: jnp.sum(
+        jnp.square(p.value.astype(jnp.float32))), grads))
+    gnorm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return _map(lambda p: Param(p.value * scale, p.axes), grads), gnorm
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """-> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def adam_update(p: Param, g: Param, st: dict):
+        gf = g.value.astype(jnp.float32)
+        m = b1 * st["m"].value + (1 - b1) * gf
+        v = b2 * st["v"].value + (1 - b2) * jnp.square(gf)
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        master = st["master"].value if "master" in st else p.value.astype(jnp.float32)
+        upd = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master
+        new_master = master - lr * upd
+        out_st = {"m": Param(m, p.axes), "v": Param(v, p.axes)}
+        if "master" in st:
+            out_st["master"] = Param(new_master, p.axes)
+        return Param(new_master.astype(p.value.dtype), p.axes), out_st
+
+    def adafactor_update(p: Param, g: Param, st: dict):
+        gf = g.value.astype(jnp.float32)
+        g2 = jnp.square(gf) + 1e-30
+        if "vr" in st:
+            vr = b2 * st["vr"].value + (1 - b2) * g2.mean(axis=-1)
+            vc = b2 * st["vc"].value + (1 - b2) * g2.mean(axis=-2)
+            denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30))[..., None] \
+                * vc[..., None, :]
+            upd = gf * jax.lax.rsqrt(denom + 1e-30)
+            out_st = {"vr": Param(vr, st["vr"].axes), "vc": Param(vc, st["vc"].axes)}
+        else:
+            v = b2 * st["v"].value + (1 - b2) * g2
+            upd = gf * jax.lax.rsqrt(v + 1e-30)
+            out_st = {"v": Param(v, p.axes)}
+        # update clipping (Adafactor's d=1.0 RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+        upd = upd / jnp.maximum(1.0, rms)
+        master = st["master"].value if "master" in st else p.value.astype(jnp.float32)
+        new_master = master - lr * (upd + cfg.weight_decay * master)
+        if "master" in st:
+            out_st["master"] = Param(new_master, p.axes)
+        return Param(new_master.astype(p.value.dtype), p.axes), out_st
+
+    upd_fn = adam_update if cfg.name == "adamw" else adafactor_update
+    flat_p, treedef = jax.tree_util.tree_flatten(params, is_leaf=_is_param)
+    flat_g = jax.tree_util.tree_leaves(grads, is_leaf=_is_param)
+    flat_s = treedef.flatten_up_to(state["ema"])
+    new_p, new_s = [], []
+    for p, g, st in zip(flat_p, flat_g, flat_s):
+        np_, ns_ = upd_fn(p, g, st)
+        new_p.append(np_)
+        new_s.append(ns_)
+    new_params = jax.tree_util.tree_unflatten(treedef, new_p)
+    new_state = {"step": step, "ema": jax.tree_util.tree_unflatten(treedef, new_s)}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

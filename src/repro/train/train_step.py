@@ -1,0 +1,102 @@
+"""Train step: value_and_grad + clip + optimizer, with optional int8
+error-feedback gradient compression (the "compressed cache" idea applied to
+the DP collective — DESIGN.md §5/§6).
+
+The compression math (quantize → dequantize with an error-feedback buffer
+carried in the train state) runs inside the step so its effect on convergence
+is real and tested; the collective-byte saving itself is measured in
+benchmarks/grad_compression.py where the psum is explicit (XLA's automatic
+gradient reduction cannot be intercepted from jit-level code).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.nn import Param
+from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+
+
+def _is_param(x):
+    return isinstance(x, Param)
+
+
+def _map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees, is_leaf=_is_param)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any          # Param tree
+    opt: Any             # optimizer state
+    ef: Any              # error-feedback buffers (or None)
+    step: Any            # int32 scalar
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.ef, s.step), None),
+    lambda _, c: TrainState(*c),
+)
+
+
+# ---- int8 error-feedback compression ---------------------------------------
+def quantize_int8(x: jnp.ndarray):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads, ef):
+    """Error-feedback int8: g' = deq(quant(g + e)); e' = (g + e) - g'."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads, is_leaf=_is_param)
+    flat_e = treedef.flatten_up_to(ef)
+    new_g, new_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        gf = g.value.astype(jnp.float32) + e.value
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        new_g.append(Param(deq.astype(g.value.dtype), g.axes))
+        new_e.append(Param(gf - deq, e.axes))
+    return (jax.tree_util.tree_unflatten(treedef, new_g),
+            jax.tree_util.tree_unflatten(treedef, new_e))
+
+
+def init_ef(params):
+    return _map(lambda p: Param(jnp.zeros(p.value.shape, jnp.float32), p.axes), params)
+
+
+# ---- step factory ----------------------------------------------------------
+def make_init_state(model: Model, opt_cfg: OptConfig, *, grad_compression=False):
+    def init_state(key) -> TrainState:
+        params = model.init(key)
+        return TrainState(
+            params=params,
+            opt=init_opt_state(params, opt_cfg),
+            ef=init_ef(params) if grad_compression else None,
+            step=jnp.zeros((), jnp.int32),
+        )
+    return init_state
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, *, grad_compression=False):
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(state.params, batch)
+        ef = state.ef
+        if grad_compression:
+            grads, ef = ef_compress_grads(grads, ef)
+        params, opt, opt_metrics = apply_updates(state.params, grads, state.opt, opt_cfg)
+        new_state = TrainState(params=params, opt=opt, ef=ef, step=state.step + 1)
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step

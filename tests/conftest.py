@@ -1,0 +1,47 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 placeholders.
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    """A deterministic RMAT graph shared across engine tests."""
+    from repro.graph.generate import rmat_edges, materialize
+    src, dst = materialize(rmat_edges(scale=9, edge_factor=8, seed=7))
+    return src, dst, 1 << 9
+
+
+@pytest.fixture(scope="session")
+def graph_store(tmp_path_factory, small_graph):
+    from repro.graph.storage import write_edge_list
+    from repro.graph.preprocess import preprocess_graph
+    src, dst, n = small_graph
+    base = tmp_path_factory.mktemp("graph")
+    write_edge_list(base / "el", [(src, dst)])
+    return preprocess_graph(str(base / "el"), str(base / "store"),
+                            threshold_edge_num=2048, ell_max_width=256)
+
+
+def pagerank_oracle(src, dst, n, iters=30, damping=0.85):
+    out_deg = np.bincount(src, minlength=n)
+    pr = np.full(n, 1.0 / n, np.float64)
+    for _ in range(iters):
+        contrib = pr / np.maximum(out_deg, 1)
+        s = np.zeros_like(pr)
+        np.add.at(s, dst, contrib[src])
+        pr = (1 - damping) / n + damping * s
+    return pr
+
+
+def min_propagation_oracle(src, dst, n, init, edge_add=0.0, iters=200):
+    """Fixpoint of v <- min(v, min_{(u,v)} (u + edge_add)) — SSSP/CC oracle."""
+    val = init.astype(np.float64).copy()
+    for _ in range(iters):
+        new = val.copy()
+        np.minimum.at(new, dst, val[src] + edge_add)
+        if (new == val).all():
+            break
+        val = new
+    return val

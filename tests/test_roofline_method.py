@@ -1,0 +1,103 @@
+"""Validates the roofline delta method (EXPERIMENTS.md §Roofline-method):
+
+1. XLA's cost model counts scan bodies once (the reason the method exists);
+2. delta-extrapolated FLOPs from (r=1, r=2) unrolled programs match a
+   directly fully-unrolled r=R program;
+3. the collective-bytes HLO parser agrees with hand-computed byte counts
+   on a known psum/all_gather program.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.dryrun import collective_bytes
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_scan_bodies_counted_once():
+    w = jnp.zeros((256, 256))
+
+    def single(x):
+        return x @ w
+
+    def scanned(x):
+        out, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=10)
+        return out
+
+    x = jnp.zeros((256, 256))
+    f1 = jax.jit(single).lower(x).compile().cost_analysis()["flops"]
+    f10 = jax.jit(scanned).lower(x).compile().cost_analysis()["flops"]
+    assert abs(f10 / f1 - 1.0) < 0.01  # the deficiency the delta method fixes
+
+
+def test_delta_extrapolation_matches_direct_unroll():
+    w = jnp.zeros((128, 128))
+    x = jnp.zeros((128, 128))
+
+    def stack(r, unroll):
+        def fn(x):
+            out, _ = jax.lax.scan(lambda c, _: (c @ w + c, None), x, None,
+                                  length=r, unroll=r if unroll else 1)
+            return out
+        return fn
+
+    def flops(r, unroll=True):
+        return jax.jit(stack(r, unroll)).lower(x).compile().cost_analysis()["flops"]
+
+    R = 7
+    f1, f2 = flops(1), flops(2)
+    extrapolated = f1 + (R - 1) * (f2 - f1)
+    direct = flops(R)
+    assert abs(extrapolated - direct) / direct < 0.01
+
+
+def test_collective_parser_known_program():
+    env_code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        import sys; sys.path.insert(0, %r)
+        from repro.launch.dryrun import collective_bytes
+
+        mesh = jax.make_mesh((8,), ('d',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        def f(x):
+            y = jax.lax.psum(x, 'd')            # all-reduce of [1024] f32
+            z = jax.lax.all_gather(y, 'd')      # all-gather -> [8,1024] f32
+            return z
+        fn = jax.shard_map(f, mesh=mesh, in_specs=P('d'), out_specs=P(None, 'd'),
+                           check_vma=False)
+        x = jnp.zeros((8 * 1024,), jnp.float32)
+        txt = jax.jit(fn).lower(x).compile().as_text()
+        got = collective_bytes(txt)
+        ar = got.get('all-reduce', 0)
+        ag = got.get('all-gather', 0)
+        assert ar >= 1024 * 4, got          # psum result bytes
+        assert ag >= 8 * 1024 * 4, got      # gathered result bytes
+        print('OK', got)
+    """) % str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", env_code], capture_output=True,
+                       text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_collective_parser_units():
+    hlo = """
+  %x = bf16[8,128]{1,0} parameter(0)
+  %ag = bf16[64,128]{1,0} all-gather(bf16[8,128]{1,0} %x), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %done = bf16[64,128]{1,0} all-gather-done(bf16[64,128] %h)
+    """
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 64 * 128 * 2
+    assert got["all-reduce"] == 256 * 4
+    # -done lines must not double count
+    assert len(got) == 2

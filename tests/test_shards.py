@@ -1,0 +1,67 @@
+"""Algorithm 1 + CSR/ELL layout properties (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.shards import (LANE, SUBLANE, build_csr_shards, compute_intervals,
+                               csr_to_ell, iter_edges)
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=200),
+       st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_intervals_partition_and_respect_threshold(degs, threshold):
+    deg = np.asarray(degs, dtype=np.int64)
+    starts = compute_intervals(deg, threshold)
+    # partition: consecutive, covering, disjoint
+    assert starts[0] == 0 and starts[-1] == len(deg)
+    assert (np.diff(starts) >= 1).all()
+    # threshold respected except for unavoidable singleton heavy vertices
+    csum = np.concatenate([[0], np.cumsum(deg)])
+    for a, b in zip(starts[:-1], starts[1:]):
+        edges = csum[b] - csum[a]
+        assert edges <= threshold or b - a == 1
+
+
+@given(st.integers(1, 6), st.integers(0, 400), st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_csr_ell_roundtrip_preserves_edges(seed, n_edges, logn):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, n_edges)
+    dst = rng.integers(0, n, n_edges)
+    val = rng.random(n_edges).astype(np.float32)
+    shards = build_csr_shards(src, dst, n, threshold_edge_num=64, val=val)
+    # every edge appears in exactly one shard; destination owned by shard
+    seen = []
+    for sh in shards:
+        for s, d, v in iter_edges(sh):
+            assert sh.start_vertex <= d < sh.end_vertex
+            seen.append((s, d, np.float32(v)))
+        ell = csr_to_ell(sh, max_width=LANE)
+        # ELL geometry
+        R, W = ell.shape
+        assert R % SUBLANE == 0 and W % LANE == 0
+        # edge multiset preserved CSR -> ELL (per destination row)
+        got = []
+        for r in range(R):
+            m = ell.cols[r] >= 0
+            for c, v in zip(ell.cols[r][m], ell.vals[r][m]):
+                got.append((int(c), sh.start_vertex + int(ell.row_map[r]),
+                            np.float32(v)))
+        assert sorted(got) == sorted(
+            (s, d, v) for (s, d, v) in seen
+            if sh.start_vertex <= d < sh.end_vertex)
+        seen = [e for e in seen if not (sh.start_vertex <= e[1] < sh.end_vertex)]
+    assert not seen or len(shards) == 0
+
+
+def test_heavy_vertex_row_wrapping():
+    """A vertex whose in-degree exceeds the ELL width wraps onto many rows."""
+    n = 16
+    src = np.arange(1000) % n
+    dst = np.zeros(1000, dtype=np.int64)  # all edges into vertex 0
+    shards = build_csr_shards(src, dst, n, threshold_edge_num=1 << 20)
+    ell = csr_to_ell(shards[0], max_width=128)
+    rows_for_v0 = (ell.row_map == 0).sum() if ell.nnz else 0
+    assert (ell.cols >= 0).sum() == 1000
+    assert rows_for_v0 >= 1000 // 128
