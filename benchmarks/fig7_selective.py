@@ -9,21 +9,23 @@ import numpy as np
 
 from benchmarks.common import get_store, row
 from repro.core import apps
-from repro.core.engine import VSWEngine
+from repro.core.engine import EngineConfig
+from repro.session import GraphSession
 
 
 def run() -> list[str]:
     out = []
     store = get_store()
+    cfg = EngineConfig(cache_mode=1, cache_budget_bytes=1 << 28,
+                       selective_threshold=1e-3)
     for name, prog, iters in (("pagerank", apps.pagerank(tol=1e-4), 120),
                               ("sssp", apps.sssp(0), 50),
                               ("cc", apps.cc(), 50)):
-        on = VSWEngine(store, prog, selective_threshold=1e-3, cache_mode=1,
-                       cache_budget_bytes=1 << 28)
-        off = VSWEngine(store, prog, selective_threshold=-1, cache_mode=1,
-                        cache_budget_bytes=1 << 28)
-        r_on = on.run(max_iters=iters)
-        r_off = off.run(max_iters=iters)
+        # separate sessions: SS on/off must each run against a cold cache
+        on = GraphSession(store, cfg)
+        off = GraphSession(store, cfg.replace(selective_threshold=-1.0))
+        r_on = on.run(prog, max_iters=iters)
+        r_off = off.run(prog, max_iters=iters)
         assert np.allclose(r_on.values, r_off.values, atol=1e-6, equal_nan=True)
         skipped = sum(h.shards_skipped for h in r_on.history)
         total = sum(h.shards_processed + h.shards_skipped for h in r_on.history)

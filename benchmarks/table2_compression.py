@@ -8,12 +8,18 @@ from __future__ import annotations
 
 import time
 
-import zstandard
+try:
+    import zstandard
+except ImportError:  # mirror core/cache.py: degrade, don't crash the sweep
+    zstandard = None
 
 from benchmarks.common import get_store, row
 
 
 def run() -> list[str]:
+    if zstandard is None:
+        return [row("table2_compression_skipped", 0.0,
+                    "zstandard not installed")]
     store = get_store()
     blob = b"".join(store.read_shard_bytes(p)
                     for p in range(min(store.num_shards, 8)))

@@ -16,7 +16,7 @@ from benchmarks.common import BENCH_DIR, get_graph, get_store, row
 from repro.baselines.esg import ESGEngine
 from repro.baselines.psw import PSWEngine
 from repro.core import apps
-from repro.core.engine import VSWEngine
+from repro.session import GraphSession
 
 C, D = 4, 8  # bytes per vertex record / edge record (f32 value, 2xint32 edge)
 
@@ -55,9 +55,9 @@ def run() -> list[str]:
     src, dst, n = get_graph()
     store = get_store()
     E = store.num_edges
-    eng = VSWEngine(store, apps.pagerank(), cache_mode=0)
-    eng.run(max_iters=3)
-    per_iter = eng.cache.stats.disk_bytes / 3
+    sess = GraphSession(store, cache_mode=0)
+    sess.run("pagerank", max_iters=3)
+    per_iter = sess.stats.disk_bytes / 3
     pred = store.total_shard_bytes()  # θ=1 at cache-0: every shard read once
     out.append(row("table3_measured_vsw_read", 0.0,
                    f"bytes/iter={per_iter/1e6:.1f}MB;pred={pred/1e6:.1f}MB;"

@@ -1,15 +1,17 @@
 """End-to-end driver (the paper's kind of workload): out-of-core analytics on
-a graph bigger than the configured cache, PR + SSSP + CC from one
-preprocessing pass, with fault injection + resume.
+a graph bigger than the configured cache, PR + SSSP + CC served by ONE
+GraphSession from one preprocessing pass, with fault injection + resume.
 
     PYTHONPATH=src python examples/graph_analytics.py [--scale 18]
 
 At --scale 18 this is ~4M edges through real disk shards; scale up if you
 have the time/disk.  Demonstrates:
-  * one preprocessing, three applications (paper §2.2);
+  * one preprocessing, one session, three applications sharing the
+    compressed cache (paper §2.2) — watch the per-app disk-byte deltas;
   * cache-mode auto-selection under a deliberately tight budget;
-  * Bloom-filter selective scheduling kicking in as SSSP/CC converge;
-  * checkpoint + resume mid-PageRank (fault tolerance).
+  * live iteration monitoring via ``session.iter_run`` (Bloom-filter
+    selective scheduling kicking in as SSSP converges);
+  * checkpoint + resume mid-PageRank (fault tolerance) through the session.
 """
 import argparse
 import tempfile
@@ -17,11 +19,8 @@ import time
 
 import numpy as np
 
-from repro.core import apps
-from repro.core.engine import VSWEngine
-from repro.graph.generate import rmat_edges, materialize
-from repro.graph.preprocess import preprocess_graph
-from repro.graph.storage import write_edge_list
+from repro import (GraphSession, materialize, preprocess_graph, rmat_edges,
+                   write_edge_list)
 
 
 def main():
@@ -42,25 +41,38 @@ def main():
               f"{store.io.written/1e6:.0f}MB written)")
 
         budget = int(store.total_shard_bytes() * 0.4)  # graph > cache
-        for name, prog, iters in (("pagerank", apps.pagerank(), 30),
-                                  ("sssp", apps.sssp(0), 100),
-                                  ("cc", apps.cc(), 100)):
-            eng = VSWEngine(store, prog, cache_mode="auto",
-                            cache_budget_bytes=budget)
-            res = eng.run(max_iters=iters)
-            st = eng.cache.stats
+        session = GraphSession(store, cache_mode="auto",
+                               cache_budget_bytes=budget)
+        print(f"session: {session!r}")
+        last_disk = 0
+        for name, kwargs, iters in (("pagerank", {}, 30),
+                                    ("sssp", {"source": 0}, 100),
+                                    ("cc", {}, 100)):
+            res = session.run(name, max_iters=iters, **kwargs)
+            st = session.stats
             skipped = sum(h.shards_skipped for h in res.history)
             print(f"{name:9s} iters={res.iterations:3d} "
-                  f"time={res.total_seconds:6.2f}s mode={eng.cache.mode} "
+                  f"time={res.total_seconds:6.2f}s mode={session.cache.mode} "
                   f"hit={st.hit_ratio:.2f} skipped_shards={skipped} "
-                  f"disk={st.disk_bytes/1e6:.0f}MB")
+                  f"disk_delta={(st.disk_bytes - last_disk)/1e6:.0f}MB "
+                  f"rate={res.edges_per_second()/1e6:.1f}M edges/s")
+            last_disk = st.disk_bytes
+
+        # live monitoring: stream IterationStats as BFS converges
+        print("bfs       live:", end=" ")
+        for it in session.iter_run("bfs", source=0, max_iters=100):
+            if it.iteration % 5 == 0:
+                print(f"[{it.iteration}] active={it.active_ratio:.4f}"
+                      f"{'*' if it.selective_enabled else ''}", end=" ")
+        print()
 
         # fault tolerance: checkpoint PR at iteration 10, resume, same answer
-        full = VSWEngine(store, apps.pagerank()).run(max_iters=20).values
-        eng = VSWEngine(store, apps.pagerank())
-        eng.run(max_iters=10, checkpoint_dir=f"{td}/ck", checkpoint_every=10)
-        resumed = VSWEngine(store, apps.pagerank()).run(
-            max_iters=20, checkpoint_dir=f"{td}/ck", resume=True)
+        full = GraphSession(store).run("pagerank", max_iters=20).values
+        ck_sess = GraphSession(store)
+        ck_sess.run("pagerank", max_iters=10,
+                    checkpoint_dir=f"{td}/ck", checkpoint_every=10)
+        resumed = GraphSession(store).run(
+            "pagerank", max_iters=20, checkpoint_dir=f"{td}/ck", resume=True)
         err = float(np.abs(resumed.values - full).max())
         print(f"resume-after-'failure' max deviation vs uninterrupted: {err:.2e}")
         assert err < 1e-6

@@ -1,9 +1,14 @@
-"""Quickstart: GraphMP in ~40 lines.
+"""Quickstart: GraphMP in five lines of API.
 
-Generates a power-law graph, preprocesses it into destination-interval ELL
-shards on disk (the paper's 3-step pipeline), then runs PageRank with the
-VSW engine — all vertices resident, edges streamed through the compressed
-cache, inactive shards Bloom-skipped.
+    generate -> preprocess -> GraphSession -> session.run(...) -> stats
+
+A ``GraphSession`` is the unified entry point: it owns the on-disk shard
+store, ONE compressed edge cache shared by every application, and the
+device-resident vertex arrays — so running PageRank, then SSSP, then CC
+pays the disk read once (the paper's "preprocess once, serve many
+applications" economics, §2.2/§2.4.2).  Under the hood each run is the VSW
+engine: all vertices device-resident, edges streamed shard-by-shard through
+the cache, inactive shards Bloom-skipped.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,11 +16,8 @@ import tempfile
 
 import numpy as np
 
-from repro.core import apps
-from repro.core.engine import VSWEngine
-from repro.graph.generate import rmat_edges, materialize
-from repro.graph.preprocess import preprocess_graph
-from repro.graph.storage import write_edge_list
+from repro import (GraphSession, materialize, preprocess_graph, rmat_edges,
+                   write_edge_list)
 
 
 def main():
@@ -30,16 +32,25 @@ def main():
         print(f"   {store.num_shards} shards, {store.num_edges} edges, "
               f"{store.num_vertices} vertices")
 
-        print("3) PageRank under VSW (compressed cache, selective scheduling)")
-        engine = VSWEngine(store, apps.pagerank(), cache_mode="auto",
-                           cache_budget_bytes=1 << 28)
-        result = engine.run(max_iters=30)
-        top = np.argsort(result.values)[-5:][::-1]
-        print(f"   {result.iterations} iterations, "
-              f"{result.total_seconds:.2f}s total")
-        print(f"   cache hit ratio {engine.cache.stats.hit_ratio:.2f}, "
-              f"disk bytes {engine.cache.stats.disk_bytes/1e6:.1f}MB")
-        print(f"   top-5 vertices by rank: {top.tolist()}")
+        print("3) one session, three applications, one shared cache")
+        with GraphSession(store, cache_mode=1,
+                          cache_budget_bytes=1 << 28) as session:
+            result = session.run("pagerank", max_iters=30)
+            top = np.argsort(result.values)[-5:][::-1]
+            print(f"   pagerank: {result.iterations} iterations, "
+                  f"{result.total_seconds:.2f}s, "
+                  f"{result.edges_per_second()/1e6:.1f}M edges/s")
+            print(f"   top-5 vertices by rank: {top.tolist()}")
+            disk_after_pr = session.stats.disk_bytes
+
+            dist = session.run("sssp", source=int(top[0]), max_iters=100)
+            comp = session.run("cc", max_iters=100)
+            print(f"   sssp reached {int(np.isfinite(dist.values).sum())} "
+                  f"vertices; cc found {len(np.unique(comp.values))} components")
+            print(f"   disk bytes: {disk_after_pr/1e6:.1f}MB for pagerank, "
+                  f"+{(session.stats.disk_bytes - disk_after_pr)/1e6:.2f}MB "
+                  f"for sssp+cc (warm cache), "
+                  f"hit ratio {session.stats.hit_ratio:.2f}")
 
 
 if __name__ == "__main__":

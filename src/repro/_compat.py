@@ -1,0 +1,70 @@
+"""Version bridge for the jax API surface this codebase targets.
+
+The code is written against the post-0.5 public names (``jax.shard_map``
+with ``check_vma``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``).  Containers pinned to jax 0.4.x expose the same
+functionality under the pre-stabilization names
+(``jax.experimental.shard_map.shard_map`` with ``check_rep``, implicit
+Auto axis types).  Importing this module installs forward-compatible
+aliases so one source tree runs on both; on new-enough jax it is a no-op.
+
+Imported for its side effects from ``repro/__init__.py`` — every entry
+point that reaches a mesh/shard_map call site goes through the package
+import first, so the aliases are in place before first use.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            # pre-AxisType jax behaves as all-Auto; dropping the kwarg is exact
+            return _make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    # Compiled.cost_analysis() returned a one-element list of dicts before
+    # jax 0.5; callers index it like the current dict return.  Wrap lazily
+    # (NO compilation here — importing repro must not init the backend,
+    # launch/dryrun.py sets XLA_FLAGS first).
+    try:
+        compiled_cls = jax.stages.Compiled
+        _orig_cost = compiled_cls.cost_analysis
+
+        def _cost_analysis(self):
+            out = _orig_cost(self)
+            if isinstance(out, list):
+                return out[0] if out else {}
+            return out
+
+        compiled_cls.cost_analysis = _cost_analysis
+    except AttributeError:
+        pass
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+            kw.pop("check_rep", None)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma, **kw)
+
+        jax.shard_map = shard_map
+
+
+_install()

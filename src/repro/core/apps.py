@@ -4,6 +4,10 @@ Each program is the vectorized form of the paper's per-vertex ``Init`` /
 ``Update`` pair, factored as (semiring, gather_transform, post, changed) —
 see core/semiring.py.  All callables are jnp-pure so the engine can close a
 jitted shard step over them.
+
+Programs register themselves with ``@register_app`` so ``GraphSession.run``
+(and anything else) can dispatch by name; downstream packages add workloads
+the same way without touching this module.
 """
 from __future__ import annotations
 
@@ -14,6 +18,45 @@ import jax.numpy as jnp
 import numpy as np
 
 Array = jnp.ndarray
+
+# name -> factory(**kwargs) -> VertexProgram.  Exposed read-only through
+# get_app()/available_apps(); APPS below is the same dict kept as a
+# backward-compatible alias.
+_REGISTRY: dict[str, Callable[..., "VertexProgram"]] = {}
+
+
+def register_app(name_or_factory=None, *, name: str | None = None):
+    """Register a VertexProgram factory under a name.
+
+    Usable bare (``@register_app``, name taken from the function) or with an
+    explicit name (``@register_app("pr")``/``@register_app(name="pr")``).
+    Re-registering a name overwrites it (latest wins), so tests can shadow.
+    """
+    if isinstance(name_or_factory, str):
+        name = name_or_factory
+
+    def deco(factory):
+        _REGISTRY[name or factory.__name__] = factory
+        return factory
+
+    if callable(name_or_factory):
+        return deco(name_or_factory)
+    return deco
+
+
+def get_app(name: str, **kwargs) -> "VertexProgram":
+    """Instantiate a registered program; kwargs go to its factory."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown graph application {name!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+    return factory(**kwargs)
+
+
+def available_apps() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +76,7 @@ class VertexProgram:
     needs_all_edges: bool = False  # True => every vertex recomputed each iter (PR)
 
 
+@register_app
 def pagerank(damping: float = 0.85, tol: float = 1e-6) -> VertexProgram:
     """tol is RELATIVE (|Δ| > tol·|old|): the paper's Fig 7a shows PR active
     ratio under 0.1% by ~iteration 110 — absolute epsilons can't reproduce
@@ -62,6 +106,7 @@ def pagerank(damping: float = 0.85, tol: float = 1e-6) -> VertexProgram:
 _INF = np.float32(np.inf)
 
 
+@register_app
 def sssp(source: int = 0) -> VertexProgram:
     def init(n, in_deg, out_deg):
         v = np.full(n, _INF, dtype=np.float32)
@@ -81,12 +126,14 @@ def sssp(source: int = 0) -> VertexProgram:
     )
 
 
+@register_app
 def bfs(source: int = 0) -> VertexProgram:
     """Hop distance = SSSP with unit edge weights (vals are 1.0 in ELL)."""
     p = sssp(source)
     return dataclasses.replace(p, name="bfs")
 
 
+@register_app
 def cc() -> VertexProgram:
     def init(n, in_deg, out_deg):
         v = np.arange(n, dtype=np.float32)  # subgraph id := vertex id (Alg 3 l.29)
@@ -103,4 +150,6 @@ def cc() -> VertexProgram:
     )
 
 
-APPS = {"pagerank": pagerank, "sssp": sssp, "cc": cc, "bfs": bfs}
+# Deprecated alias: the live registry itself (mutations via register_app
+# are visible here and vice versa).  Prefer get_app()/register_app.
+APPS = _REGISTRY

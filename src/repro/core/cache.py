@@ -21,10 +21,15 @@ from __future__ import annotations
 import dataclasses
 import io as _io
 import time
+import warnings
 from collections import OrderedDict
 
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional: modes 2-4 degrade to raw caching (mode 1)
+    zstandard = None
 
 from repro.core.shards import ELLShard
 from repro.graph.storage import GraphStore
@@ -98,6 +103,12 @@ class CompressedShardCache:
         self.budget = int(budget_bytes)
         if mode == "auto":
             mode = auto_select_mode(store.total_shard_bytes(), self.budget)
+        if int(mode) in ZSTD_LEVEL and zstandard is None:
+            warnings.warn(
+                f"zstandard is not installed; cache mode {int(mode)} needs it "
+                "— falling back to mode 1 (raw shard caching)",
+                RuntimeWarning, stacklevel=2)
+            mode = 1
         self.mode = int(mode)
         self.stats = CacheStats()
         self._lru: OrderedDict[int, bytes | ELLShard] = OrderedDict()
@@ -158,6 +169,11 @@ class CompressedShardCache:
             self._lru[shard_id] = entry
             self._bytes += need
         return shard
+
+    def clear(self) -> None:
+        """Drop every cached entry (budget and stats are kept)."""
+        self._lru.clear()
+        self._bytes = 0
 
     def measured_ratio(self) -> float:
         """Achieved compression ratio over currently cached shards."""

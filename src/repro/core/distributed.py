@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.apps import VertexProgram
+from repro.core.apps import VertexProgram, get_app
 from repro.core.shards import SUBLANE, ELLShard, build_csr_shards, csr_to_ell
 from repro.kernels.spmv.ops import ell_spmv
 
@@ -92,8 +92,14 @@ def partition_for_mesh(
 class DistributedVSW:
     """1-D distributed VSW engine over a mesh axis (default 'data')."""
 
-    def __init__(self, graph: DeviceShardedGraph, program: VertexProgram,
-                 mesh: Mesh, axis: str = "data", use_pallas: bool | str = "auto"):
+    def __init__(self, graph: DeviceShardedGraph,
+                 program: VertexProgram | str,
+                 mesh: Mesh, axis: str = "data",
+                 use_pallas: bool | str = "auto", config=None):
+        if isinstance(program, str):
+            program = get_app(program)
+        if config is not None:  # share EngineConfig tuning with the session API
+            use_pallas = config.use_pallas
         self.g = graph
         self.program = program
         self.mesh = mesh

@@ -10,6 +10,13 @@ Faithful structure:
     ``active_ratio < selective_threshold`` (paper: 0.001) the per-shard Bloom
     filters gate shard loading (Algorithm 2 line 5).
 
+Construction: engines are normally built *by* a ``repro.session.GraphSession``
+which owns the store, ONE ``CompressedShardCache``, and the device-resident
+degree arrays shared by every application (paper §2.2's "preprocess once,
+serve many").  Tuning lives in the frozen ``EngineConfig``; the old kwarg
+signature (``cache_mode=...`` etc.) still works as a deprecated shim that
+builds a private cache.
+
 Fault tolerance: the VSW invariant makes engine state tiny (2C|V| + cursor);
 ``checkpoint_every`` snapshots (values, iteration) with atomic rename, and
 ``run(resume=True)`` restarts from the latest snapshot.
@@ -20,7 +27,9 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from pathlib import Path
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +40,90 @@ from repro.core.cache import CompressedShardCache
 from repro.core.shards import ELLShard
 from repro.graph.storage import GraphStore
 from repro.kernels.spmv.ops import ell_spmv
+
+_VALID_CACHE_MODES = (0, 1, 2, 3, 4)
+
+
+def _env(name: str, default, cast):
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        return cast(raw)
+    except (TypeError, ValueError):
+        warnings.warn(f"ignoring unparseable {name}={raw!r}", RuntimeWarning)
+        return default
+
+
+def _cast_mode(raw: str):
+    return raw if raw == "auto" else int(raw)
+
+
+def _cast_tristate(raw: str):
+    low = raw.lower()
+    if low == "auto":
+        return "auto"
+    return low in ("1", "true", "yes", "on")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Validated, immutable engine tuning (replaces the old kwarg soup).
+
+    ``from_env()`` reads ``GRAPHMP_*`` environment overrides; ``replace()``
+    derives per-run variants without mutating the shared default.
+    """
+
+    cache_mode: int | str = "auto"          # 'auto' | 0..4 (paper §2.4.2)
+    cache_budget_bytes: int = 1 << 30       # host bytes for the edge cache
+    selective_threshold: float = 1e-3       # active ratio below which Bloom
+    #                                         scheduling kicks in; <0 disables
+    use_pallas: bool | str = "auto"         # SpMV kernel backend selection
+    preload: bool = False                   # pin every shard at construction
+
+    def __post_init__(self):
+        mode = self.cache_mode
+        if not (mode == "auto" or (isinstance(mode, int)
+                                   and not isinstance(mode, bool)
+                                   and mode in _VALID_CACHE_MODES)):
+            raise ValueError(
+                f"cache_mode must be 'auto' or one of {_VALID_CACHE_MODES}, "
+                f"got {mode!r}")
+        if not isinstance(self.cache_budget_bytes, int) \
+                or isinstance(self.cache_budget_bytes, bool) \
+                or self.cache_budget_bytes <= 0:
+            raise ValueError(
+                f"cache_budget_bytes must be a positive int, "
+                f"got {self.cache_budget_bytes!r}")
+        if not np.isfinite(self.selective_threshold):
+            raise ValueError(
+                f"selective_threshold must be finite, "
+                f"got {self.selective_threshold!r}")
+        if self.use_pallas not in (True, False, "auto"):
+            raise ValueError(
+                f"use_pallas must be True, False or 'auto', "
+                f"got {self.use_pallas!r}")
+
+    @classmethod
+    def from_env(cls, **overrides) -> "EngineConfig":
+        """Defaults with GRAPHMP_* environment overrides applied underneath
+        explicit keyword overrides."""
+        base = dict(
+            cache_mode=_env("GRAPHMP_CACHE_MODE", cls.cache_mode, _cast_mode),
+            cache_budget_bytes=_env("GRAPHMP_CACHE_BUDGET_BYTES",
+                                    cls.cache_budget_bytes, int),
+            selective_threshold=_env("GRAPHMP_SELECTIVE_THRESHOLD",
+                                     cls.selective_threshold, float),
+            use_pallas=_env("GRAPHMP_USE_PALLAS", cls.use_pallas,
+                            _cast_tristate),
+            preload=_env("GRAPHMP_PRELOAD", cls.preload,
+                         lambda r: _cast_tristate(r) is True),
+        )
+        base.update(overrides)
+        return cls(**base)
+
+    def replace(self, **changes) -> "EngineConfig":
+        return dataclasses.replace(self, **changes)
 
 
 @dataclasses.dataclass
@@ -43,6 +136,7 @@ class IterationStats:
     disk_bytes: int
     cache_hit_ratio: float
     selective_enabled: bool
+    edges_processed: int = 0    # sum of nnz over the shards actually run
 
 
 @dataclasses.dataclass
@@ -56,47 +150,114 @@ class RunResult:
     def total_seconds(self) -> float:
         return sum(h.seconds for h in self.history)
 
-    def edges_per_second(self, num_edges: int) -> float:
-        proc = sum(h.shards_processed for h in self.history)
-        total = max(len(self.history), 1)
-        # average over processed fraction of shards
-        return num_edges * (proc / max(proc + sum(h.shards_skipped for h in self.history), 1)) \
-            * total / max(self.total_seconds, 1e-9)
+    @property
+    def total_edges_processed(self) -> int:
+        return sum(h.edges_processed for h in self.history)
+
+    def edges_per_second(self, num_edges: int | None = None) -> float:
+        """Throughput over edges actually processed.
+
+        Shards hold unequal edge counts, so skipped shards are weighted by
+        their per-shard nnz (recorded in each IterationStats), not by shard
+        count — selective-scheduling runs report honest edges/sec.
+        ``num_edges`` is only a fallback for histories recorded before
+        per-iteration edge counts existed (assumes no shard skipping).
+        """
+        processed = self.total_edges_processed
+        if processed == 0 and num_edges is not None \
+                and not any(h.selective_enabled for h in self.history):
+            processed = num_edges * len(self.history)
+        return processed / max(self.total_seconds, 1e-9)
+
+
+_LEGACY_KWARGS = ("cache_mode", "cache_budget_bytes", "selective_threshold",
+                  "use_pallas", "preload")
 
 
 class VSWEngine:
+    """One vertex program bound to a graph store (Algorithm 2 executor).
+
+    New API::
+
+        session = GraphSession(store, config)
+        result = session.run("pagerank", max_iters=30)
+
+    or explicitly ``VSWEngine(store, program, config)``.  The old keyword
+    signature (``VSWEngine(store, prog, cache_mode=2, ...)``) is kept as a
+    deprecated shim and builds a private cache.
+    """
+
     def __init__(
         self,
         store: GraphStore,
         program: VertexProgram,
-        cache_mode: int | str = "auto",
-        cache_budget_bytes: int = 1 << 30,
-        selective_threshold: float = 1e-3,
-        use_pallas: bool | str = "auto",
-        preload: bool = False,
+        config: EngineConfig | int | str | None = None,
+        *,
+        cache: CompressedShardCache | None = None,
+        vertex_info: tuple[np.ndarray, np.ndarray] | None = None,
+        blooms: list | None = None,
+        out_deg_dev: jnp.ndarray | None = None,
+        n_pad: int | None = None,
+        **legacy,
     ):
+        if config is not None and not isinstance(config, EngineConfig):
+            # old positional cache_mode slot
+            legacy.setdefault("cache_mode", config)
+            config = None
+        unknown = set(legacy) - set(_LEGACY_KWARGS)
+        if unknown:
+            raise TypeError(f"unexpected VSWEngine arguments: {sorted(unknown)}")
+        if legacy:
+            warnings.warn(
+                "VSWEngine(cache_mode=..., cache_budget_bytes=..., ...) is "
+                "deprecated; pass an EngineConfig (or use GraphSession, which "
+                "shares one compressed cache across applications)",
+                DeprecationWarning, stacklevel=2)
+            config = (config or EngineConfig()).replace(**legacy)
+        self.config = config or EngineConfig()
         self.store = store
         self.program = program
-        self.cache = CompressedShardCache(store, mode=cache_mode, budget_bytes=cache_budget_bytes)
-        self.selective_threshold = selective_threshold
-        self.use_pallas = use_pallas
-        self.preload = preload
+        self.cache = cache if cache is not None else CompressedShardCache(
+            store, mode=self.config.cache_mode,
+            budget_bytes=self.config.cache_budget_bytes)
+        self.selective_threshold = self.config.selective_threshold
+        self.use_pallas = self.config.use_pallas
+        self.preload = self.config.preload
         self.n = store.num_vertices
-        self.in_deg, self.out_deg = store.read_vertex_info()
-        self.blooms = store.read_all_blooms()
+        self.in_deg, self.out_deg = (vertex_info if vertex_info is not None
+                                     else store.read_vertex_info())
+        self.blooms = blooms if blooms is not None else store.read_all_blooms()
         self.intervals = store.intervals
         self.P = store.num_shards
         shard_meta = store.properties["shards"]
+        self._shard_nnz = [int(m.get("nnz", 0)) for m in shard_meta]
         self.max_rows = max((m["rows"] for m in shard_meta), default=8)
         # pad the vertex arrays so every dynamic_slice of length R is in-bounds
-        self.n_pad = self.n + self.max_rows
-        self._out_deg_dev = jnp.asarray(
-            np.pad(self.out_deg, (0, self.n_pad - self.n)).astype(np.float32))
+        self.n_pad = n_pad if n_pad is not None else self.n + self.max_rows
+        if out_deg_dev is not None:
+            self._out_deg_dev = out_deg_dev
+        else:
+            self._out_deg_dev = jnp.asarray(
+                np.pad(self.out_deg, (0, self.n_pad - self.n)).astype(np.float32))
         self._build_steps()
         self._preloaded: dict[int, ELLShard] = {}
-        if preload:
+        if self.preload:
             for p in range(self.P):
                 self._preloaded[p] = self.cache.get(p)
+        self.last_result: RunResult | None = None
+
+    @classmethod
+    def from_session(cls, session, program: VertexProgram,
+                     config: EngineConfig | None = None) -> "VSWEngine":
+        """Build an engine that shares the session's cache + degree arrays."""
+        return cls(
+            session.store, program, config or session.config,
+            cache=session.cache,
+            vertex_info=(session.in_deg, session.out_deg),
+            blooms=session.blooms,
+            out_deg_dev=session.out_deg_dev,
+            n_pad=session.n_pad,
+        )
 
     # ------------------------------------------------------------------
     def _build_steps(self) -> None:
@@ -143,13 +304,16 @@ class VSWEngine:
         return keep, True
 
     # ------------------------------------------------------------------
-    def run(
+    def iter_run(
         self,
         max_iters: int = 200,
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         resume: bool = False,
-    ) -> RunResult:
+    ) -> Iterator[IterationStats]:
+        """Generator form of ``run``: yields an IterationStats after every
+        iteration (live monitoring), returns the RunResult on exhaustion
+        (also stored in ``self.last_result``)."""
         values, active_mask = self.program.init(self.n, self.in_deg, self.out_deg)
         start_iter = 0
         if resume and checkpoint_dir:
@@ -187,20 +351,21 @@ class VSWEngine:
             active_ids = np.nonzero(changed)[0]
             active_ratio = active_ids.size / self.n
             src = dst
-            history.append(
-                IterationStats(
-                    iteration=it,
-                    seconds=time.time() - t0,
-                    active_ratio=active_ratio,
-                    shards_processed=len(schedule),
-                    shards_skipped=self.P - len(schedule),
-                    disk_bytes=self.cache.stats.disk_bytes - disk0,
-                    cache_hit_ratio=self.cache.stats.hit_ratio,
-                    selective_enabled=selective,
-                )
+            stats = IterationStats(
+                iteration=it,
+                seconds=time.time() - t0,
+                active_ratio=active_ratio,
+                shards_processed=len(schedule),
+                shards_skipped=self.P - len(schedule),
+                disk_bytes=self.cache.stats.disk_bytes - disk0,
+                cache_hit_ratio=self.cache.stats.hit_ratio,
+                selective_enabled=selective,
+                edges_processed=sum(self._shard_nnz[p] for p in schedule),
             )
+            history.append(stats)
             if checkpoint_dir and checkpoint_every and (it + 1) % checkpoint_every == 0:
                 save_checkpoint(checkpoint_dir, np.asarray(src[: self.n]), changed, it + 1)
+            yield stats
             if active_ids.size == 0:
                 converged = True
                 break
@@ -211,7 +376,25 @@ class VSWEngine:
             # the frontier the interrupted run would have used next
             save_checkpoint(checkpoint_dir, final, last_changed,
                             len(history) + start_iter)
-        return RunResult(values=final, iterations=len(history), history=history, converged=converged)
+        result = RunResult(values=final, iterations=len(history),
+                           history=history, converged=converged)
+        self.last_result = result
+        return result
+
+    def run(
+        self,
+        max_iters: int = 200,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 0,
+        resume: bool = False,
+    ) -> RunResult:
+        gen = self.iter_run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
+                            checkpoint_every=checkpoint_every, resume=resume)
+        while True:
+            try:
+                next(gen)
+            except StopIteration as stop:
+                return stop.value
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,3 @@
+# Distributed substrate: logical-axis sharding rules (see dist/context.py).
+# No eager re-exports — importing this package must not touch jax device
+# state (launch/dryrun.py sets XLA_FLAGS before its imports).

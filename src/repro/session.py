@@ -1,0 +1,176 @@
+"""GraphSession: the unified entry point for graph analytics.
+
+GraphMP's central economics are "preprocess once, serve many applications
+from the same shards, with the compressed edge cache absorbing the disk
+I/O" (paper §2.2, §2.4.2).  A ``GraphSession`` is the long-lived object
+that realises that: it owns the ``GraphStore``, exactly ONE
+``CompressedShardCache``, the device-resident padded degree arrays, the
+per-shard Bloom filters, and a per-program cache of constructed engines
+(so re-running an application reuses its jitted step functions).
+
+    from repro import GraphSession
+
+    with GraphSession(store_path, cache_budget_bytes=1 << 28) as s:
+        pr = s.run("pagerank", max_iters=30)
+        d  = s.run("sssp", source=0)          # warm cache: ~no disk reads
+        cc = s.run("cc")
+        print(s.stats.hit_ratio, s.stats.disk_bytes)
+
+Applications dispatch through the ``@register_app`` registry
+(core/apps.py) by name, or a ``VertexProgram`` can be passed directly.
+``run_many`` batches several applications; ``iter_run`` yields an
+``IterationStats`` per iteration for live monitoring.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable, Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apps import VertexProgram, get_app
+from repro.core.cache import CompressedShardCache
+from repro.core.engine import (EngineConfig, IterationStats, RunResult,
+                               VSWEngine)
+from repro.graph.storage import GraphStore
+
+
+class GraphSession:
+    """Long-lived analytics session over one preprocessed graph.
+
+    Parameters
+    ----------
+    store:
+        A ``GraphStore`` or a path to a preprocessed graph directory.
+    config:
+        ``EngineConfig`` shared by every engine the session builds.  When
+        omitted it comes from ``EngineConfig.from_env()``; extra keyword
+        arguments (``cache_budget_bytes=...``, ...) override single fields.
+    """
+
+    def __init__(self, store: GraphStore | str | os.PathLike,
+                 config: EngineConfig | None = None, **overrides):
+        if not isinstance(store, GraphStore):
+            store = GraphStore(store)
+        if config is None:
+            config = EngineConfig.from_env(**overrides)
+        elif overrides:
+            config = config.replace(**overrides)
+        self.store = store
+        self.config = config
+        self.cache = CompressedShardCache(
+            store, mode=config.cache_mode,
+            budget_bytes=config.cache_budget_bytes)
+        # shared vertex metadata: read from disk exactly once per session
+        self.in_deg, self.out_deg = store.read_vertex_info()
+        self.blooms = store.read_all_blooms()
+        shard_meta = store.properties["shards"]
+        self.max_rows = max((m["rows"] for m in shard_meta), default=8)
+        self.n = store.num_vertices
+        self.n_pad = self.n + self.max_rows
+        # device-resident padded out-degrees, shared by every engine
+        self.out_deg_dev = jnp.asarray(
+            np.pad(self.out_deg, (0, self.n_pad - self.n)).astype(np.float32))
+        self._engines: dict = {}
+
+    # -- engine construction / reuse ------------------------------------
+    def _resolve(self, app, app_kwargs) -> tuple[VertexProgram, object]:
+        if isinstance(app, VertexProgram):
+            if app_kwargs:
+                raise TypeError(
+                    "application kwargs only apply when dispatching by name; "
+                    f"got a VertexProgram plus {sorted(app_kwargs)}")
+            return app, ("prog", id(app))
+        program = get_app(app, **app_kwargs)
+        return program, ("name", app, tuple(sorted(app_kwargs.items())))
+
+    def engine(self, app: str | VertexProgram, config: EngineConfig | None = None,
+               **app_kwargs) -> VSWEngine:
+        """The session-shared engine for an application (built once per
+        (program, config); reuse keeps the jitted step caches warm)."""
+        program, prog_key = self._resolve(app, app_kwargs)
+        key = (prog_key, config or self.config)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = VSWEngine.from_session(self, program, config)
+            if prog_key[0] == "prog":
+                # a raw-id key must keep the program alive to stay unique
+                eng._keyed_program = program
+            self._engines[key] = eng
+        return eng
+
+    # -- running --------------------------------------------------------
+    def run(self, app: str | VertexProgram, *, max_iters: int = 200,
+            checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+            resume: bool = False, config: EngineConfig | None = None,
+            **app_kwargs) -> RunResult:
+        """Run one application to ``max_iters`` or convergence.
+
+        ``app`` is a registered name (extra kwargs go to its factory, e.g.
+        ``run("sssp", source=3)``) or a ``VertexProgram``.  ``config``
+        overrides the session config for this application's engine (the
+        compressed cache stays shared either way).
+        """
+        eng = self.engine(app, config, **app_kwargs)
+        return eng.run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
+                       checkpoint_every=checkpoint_every, resume=resume)
+
+    def iter_run(self, app: str | VertexProgram, *, max_iters: int = 200,
+                 checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+                 resume: bool = False, config: EngineConfig | None = None,
+                 **app_kwargs) -> Iterator[IterationStats]:
+        """Streaming form of ``run``: yields IterationStats per iteration.
+
+        The finished RunResult is the generator's return value
+        (``StopIteration.value``) and is also available afterwards as
+        ``session.engine(app, ...).last_result``.
+        """
+        eng = self.engine(app, config, **app_kwargs)
+        return eng.iter_run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
+                            checkpoint_every=checkpoint_every, resume=resume)
+
+    def run_many(self, apps: Iterable, **run_kwargs) -> list[RunResult]:
+        """Run several applications back-to-back over the shared cache.
+
+        Each item is a registered name, a ``(name, factory_kwargs)`` pair,
+        or a ``VertexProgram``; ``run_kwargs`` (``max_iters=...``) apply to
+        every run.  Returns results in input order.
+        """
+        results = []
+        for item in apps:
+            if isinstance(item, tuple):
+                name, kw = item
+                results.append(self.run(name, **run_kwargs, **kw))
+            else:
+                results.append(self.run(item, **run_kwargs))
+        return results
+
+    # -- observability / lifecycle --------------------------------------
+    @property
+    def stats(self):
+        """Shared CompressedShardCache stats (hits, disk_bytes, ...)."""
+        return self.cache.stats
+
+    def warm(self) -> int:
+        """Pull every shard through the cache once (prefetch); returns the
+        bytes now resident."""
+        for p in range(self.store.num_shards):
+            self.cache.get(p)
+        return self.cache.cached_bytes
+
+    def close(self) -> None:
+        """Drop engine and cache references (jit caches, cached blobs)."""
+        self._engines.clear()
+        self.cache.clear()
+
+    def __enter__(self) -> "GraphSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return (f"GraphSession({str(self.store.path)!r}, |V|={self.n}, "
+                f"|E|={self.store.num_edges}, shards={self.store.num_shards}, "
+                f"cache_mode={self.cache.mode})")

@@ -1,7 +1,8 @@
 """Bloom filter properties — the safety of selective scheduling rests on
 "no false negatives" (a skipped shard is truly unable to produce updates)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from tests._hypo import given, settings, st
 
 from repro.core.bloom import BloomFilter
 

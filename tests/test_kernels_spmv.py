@@ -2,7 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypo import given, settings, st
 
 from repro.core.semiring import SEMIRINGS
 from repro.kernels.spmv import ref

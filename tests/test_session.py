@@ -1,0 +1,198 @@
+"""GraphSession behaviour: one entry point, one shared compressed cache.
+
+The economic claim under test is the paper's §2.2/§2.4.2 shape: preprocess
+once, then serve many applications from the same shards with the cache
+absorbing the disk I/O — a second application on a warm session must read
+(almost) nothing from disk, where the old one-private-cache-per-engine API
+re-read the whole graph per application.
+"""
+import numpy as np
+import pytest
+
+from repro.core import apps
+from repro.core.apps import VertexProgram, available_apps, get_app, register_app
+from repro.core.engine import EngineConfig, IterationStats, RunResult
+from repro.session import GraphSession
+
+
+# ---------------------------------------------------------------------------
+# (a) shared cache economics
+# ---------------------------------------------------------------------------
+def test_warm_cache_serves_later_apps_without_disk(graph_store):
+    """PR then SSSP then CC through ONE session: at most one full-graph read
+    total — after the first app, per-app disk growth stays under 5% of the
+    on-disk graph."""
+    total = graph_store.total_shard_bytes()
+    sess = GraphSession(graph_store, cache_mode=1,
+                        cache_budget_bytes=4 * total)  # budget >= graph
+    sess.run("pagerank", max_iters=10)
+    d1 = sess.stats.disk_bytes
+    assert d1 <= 1.05 * total  # one full read (plus rounding), no more
+    sess.run("sssp", source=0, max_iters=50)
+    d2 = sess.stats.disk_bytes
+    sess.run("cc", max_iters=50)
+    d3 = sess.stats.disk_bytes
+    assert d2 - d1 < 0.05 * total, "sssp re-read the graph"
+    assert d3 - d2 < 0.05 * total, "cc re-read the graph"
+
+
+def test_fresh_engines_pay_per_app_but_session_does_not(graph_store):
+    """The regression the session API exists to prevent: per-engine private
+    caches re-read the graph for every application."""
+    total = graph_store.total_shard_bytes()
+    per_engine = 0
+    for name in ("pagerank", "cc"):
+        s = GraphSession(graph_store, cache_mode=1, cache_budget_bytes=4 * total)
+        s.run(name, max_iters=10)
+        per_engine += s.stats.disk_bytes
+    shared = GraphSession(graph_store, cache_mode=1, cache_budget_bytes=4 * total)
+    shared.run("pagerank", max_iters=10)
+    shared.run("cc", max_iters=10)
+    assert per_engine >= 1.9 * shared.stats.disk_bytes
+
+
+def test_session_results_match_across_shared_cache(graph_store):
+    """Cache sharing is invisible to results."""
+    sess = GraphSession(graph_store, cache_mode=1, cache_budget_bytes=1 << 28)
+    pr_warm = sess.run("pagerank", max_iters=15)
+    pr_cold = GraphSession(graph_store, cache_mode=0).run("pagerank",
+                                                          max_iters=15)
+    np.testing.assert_allclose(pr_warm.values, pr_cold.values, atol=1e-7)
+
+
+def test_rerun_reuses_engine_and_jit_caches(graph_store):
+    sess = GraphSession(graph_store)
+    e1 = sess.engine("pagerank")
+    sess.run("pagerank", max_iters=3)
+    assert sess.engine("pagerank") is e1
+    # different factory kwargs -> different engine, same shared cache
+    e2 = sess.engine("pagerank", damping=0.5)
+    assert e2 is not e1
+    assert e2.cache is e1.cache is sess.cache
+
+
+# ---------------------------------------------------------------------------
+# (b) registry round-trip
+# ---------------------------------------------------------------------------
+def test_register_app_round_trip(graph_store):
+    # explicit name deliberately differs from the function name: the
+    # registry must honour the decorator argument, not __name__
+    @register_app("frontier_walk")
+    def _my_custom_factory():
+        base = apps.sssp(0)
+        import dataclasses
+        return dataclasses.replace(base, name="frontier_walk")
+
+    assert "frontier_walk" in available_apps()
+    assert "_my_custom_factory" not in available_apps()
+    assert isinstance(get_app("frontier_walk"), VertexProgram)
+    res = GraphSession(graph_store).run("frontier_walk", max_iters=5)
+    assert isinstance(res, RunResult)
+    # cleanup: keep the registry stable for other tests
+    del apps._REGISTRY["frontier_walk"]
+
+
+def test_builtin_apps_registered():
+    assert {"pagerank", "sssp", "cc", "bfs"} <= set(available_apps())
+    # deprecated alias stays live
+    assert apps.APPS["pagerank"] is apps.pagerank
+
+
+def test_unknown_app_name_raises(graph_store):
+    with pytest.raises(KeyError, match="unknown graph application"):
+        GraphSession(graph_store).run("nope")
+
+
+def test_factory_kwargs_dispatch(graph_store):
+    res = GraphSession(graph_store).run("sssp", source=3, max_iters=50)
+    assert res.values[3] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# (c) EngineConfig validation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bad", [
+    dict(cache_mode=7),
+    dict(cache_mode=-1),
+    dict(cache_mode="fast"),
+    dict(cache_mode=True),
+    dict(cache_budget_bytes=0),
+    dict(cache_budget_bytes=-4096),
+    dict(cache_budget_bytes=1.5),
+    dict(selective_threshold=float("nan")),
+    dict(use_pallas="maybe"),
+])
+def test_engine_config_rejects_bad_values(bad):
+    with pytest.raises(ValueError):
+        EngineConfig(**bad)
+
+
+def test_engine_config_replace_and_env(monkeypatch):
+    cfg = EngineConfig()
+    assert cfg.replace(cache_mode=2).cache_mode == 2
+    assert cfg.cache_mode == "auto"  # frozen: replace does not mutate
+    monkeypatch.setenv("GRAPHMP_CACHE_MODE", "3")
+    monkeypatch.setenv("GRAPHMP_CACHE_BUDGET_BYTES", str(1 << 20))
+    env_cfg = EngineConfig.from_env()
+    assert env_cfg.cache_mode == 3
+    assert env_cfg.cache_budget_bytes == 1 << 20
+    # explicit overrides beat the environment
+    assert EngineConfig.from_env(cache_mode=1).cache_mode == 1
+
+
+def test_session_kwarg_overrides(graph_store):
+    sess = GraphSession(graph_store, cache_mode=1, cache_budget_bytes=1 << 22)
+    assert sess.config.cache_mode == 1
+    assert sess.cache.budget == 1 << 22
+
+
+# ---------------------------------------------------------------------------
+# (d) checkpoint / resume through the session
+# ---------------------------------------------------------------------------
+def test_checkpoint_resume_through_session(graph_store, tmp_path):
+    full = GraphSession(graph_store).run("pagerank", max_iters=20)
+    interrupted = GraphSession(graph_store)
+    interrupted.run("pagerank", max_iters=10,
+                    checkpoint_dir=str(tmp_path), checkpoint_every=5)
+    resumed = GraphSession(graph_store).run(
+        "pagerank", max_iters=20, checkpoint_dir=str(tmp_path), resume=True)
+    np.testing.assert_allclose(resumed.values, full.values, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# streaming + throughput accounting
+# ---------------------------------------------------------------------------
+def test_iter_run_streams_iteration_stats(graph_store):
+    sess = GraphSession(graph_store)
+    gen = sess.iter_run("pagerank", max_iters=7)
+    seen = []
+    while True:
+        try:
+            seen.append(next(gen))
+        except StopIteration as stop:
+            result = stop.value
+            break
+    assert len(seen) == 7
+    assert all(isinstance(s, IterationStats) for s in seen)
+    assert [s.iteration for s in seen] == list(range(7))
+    assert isinstance(result, RunResult)
+    assert result.iterations == 7
+    assert sess.engine("pagerank").last_result is result
+
+
+def test_edges_per_second_weights_by_shard_nnz(graph_store):
+    """Skipping light shards must not inflate throughput: processed edges are
+    summed per shard nnz, and a full run processes exactly E per iteration."""
+    sess = GraphSession(graph_store)
+    res = sess.run("pagerank", max_iters=4)
+    E = graph_store.num_edges
+    assert res.total_edges_processed == 4 * E
+    assert res.edges_per_second() == pytest.approx(
+        4 * E / res.total_seconds, rel=1e-6)
+
+
+def test_run_many_order_and_types(graph_store):
+    sess = GraphSession(graph_store)
+    results = sess.run_many(
+        ["cc", ("sssp", {"source": 0}), apps.bfs(0)], max_iters=5)
+    assert [type(r) for r in results] == [RunResult] * 3

@@ -1,6 +1,7 @@
 """Algorithm 1 + CSR/ELL layout properties (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from tests._hypo import given, settings, st
 
 from repro.core.shards import (LANE, SUBLANE, build_csr_shards, compute_intervals,
                                csr_to_ell, iter_edges)

@@ -1,6 +1,7 @@
 """End-to-end behaviour tests for the GraphMP engine (the paper's system).
 
-Validates the three paper claims at test scale:
+Validates the three paper claims at test scale, through the ``GraphSession``
+public API:
   * VSW produces exactly the same fixpoints as straight numpy/networkx
     oracles for PR/SSSP/CC/BFS (Algorithm 2+3 correctness);
   * selective scheduling (Bloom-gated shard skipping) changes I/O, never
@@ -12,16 +13,16 @@ import numpy as np
 import pytest
 
 from repro.core import apps
-from repro.core.engine import VSWEngine, latest_checkpoint
+from repro.core.engine import EngineConfig, VSWEngine, latest_checkpoint
+from repro.session import GraphSession
 from tests.conftest import min_propagation_oracle, pagerank_oracle
 
 
 def test_pagerank_matches_oracle(graph_store, small_graph):
     src, dst, _ = small_graph
     n = graph_store.num_vertices
-    eng = VSWEngine(graph_store, apps.pagerank(), cache_mode=2,
-                    cache_budget_bytes=1 << 26)
-    res = eng.run(max_iters=30)
+    sess = GraphSession(graph_store, cache_mode=1, cache_budget_bytes=1 << 26)
+    res = sess.run("pagerank", max_iters=30)
     oracle = pagerank_oracle(src, dst, n, iters=30)
     np.testing.assert_allclose(res.values, oracle, atol=1e-6)
     assert abs(res.values.sum() - oracle.sum()) < 1e-3
@@ -31,8 +32,8 @@ def test_sssp_matches_networkx(graph_store, small_graph):
     import networkx as nx
     src, dst, _ = small_graph
     n = graph_store.num_vertices
-    eng = VSWEngine(graph_store, apps.sssp(source=0), cache_mode=1)
-    res = eng.run(max_iters=200)
+    sess = GraphSession(graph_store, cache_mode=1)
+    res = sess.run("sssp", source=0, max_iters=200)
     assert res.converged
     G = nx.DiGraph()
     G.add_edges_from(zip(src.tolist(), dst.tolist()))
@@ -48,8 +49,8 @@ def test_sssp_matches_networkx(graph_store, small_graph):
 def test_cc_matches_fixpoint(graph_store, small_graph):
     src, dst, _ = small_graph
     n = graph_store.num_vertices
-    eng = VSWEngine(graph_store, apps.cc(), cache_mode=0)
-    res = eng.run(max_iters=300)
+    sess = GraphSession(graph_store, cache_mode=0)
+    res = sess.run("cc", max_iters=300)
     assert res.converged
     oracle = min_propagation_oracle(src, dst, n, np.arange(n), iters=300)
     np.testing.assert_array_equal(res.values, oracle)
@@ -70,13 +71,15 @@ def test_selective_scheduling_is_lossless(tmp_path):
     write_edge_list(tmp_path / "el", [(src, dst)], num_vertices=n)
     store = preprocess_graph(str(tmp_path / "el"), str(tmp_path / "g"),
                              threshold_edge_num=256)
-    on = VSWEngine(store, apps.sssp(source=0), selective_threshold=1e-3)
-    off = VSWEngine(store, apps.sssp(source=0), selective_threshold=-1.0)
-    r_on = on.run(max_iters=60)
-    r_off = off.run(max_iters=60)
+    on = GraphSession(store, selective_threshold=1e-3)
+    off = GraphSession(store, selective_threshold=-1.0)
+    r_on = on.run("sssp", source=0, max_iters=60)
+    r_off = off.run("sssp", source=0, max_iters=60)
     np.testing.assert_array_equal(r_on.values, r_off.values)
     assert sum(h.shards_skipped for h in r_on.history) > 0
     assert sum(h.shards_skipped for h in r_off.history) == 0
+    # skipped shards must not be counted as processed edges
+    assert r_on.total_edges_processed < r_off.total_edges_processed
     # the frontier walks the path: distance k is exactly k where reached
     reached = np.isfinite(r_on.values)
     np.testing.assert_array_equal(r_on.values[reached],
@@ -85,38 +88,61 @@ def test_selective_scheduling_is_lossless(tmp_path):
 
 @pytest.mark.parametrize("mode", [0, 1, 2, 3, 4])
 def test_cache_modes_are_lossless(graph_store, mode):
-    eng = VSWEngine(graph_store, apps.cc(), cache_mode=mode,
-                    cache_budget_bytes=1 << 24)
-    res = eng.run(max_iters=50)
-    base = VSWEngine(graph_store, apps.cc(), cache_mode=0).run(max_iters=50)
+    sess = GraphSession(graph_store, cache_mode=mode,
+                        cache_budget_bytes=1 << 24)
+    res = sess.run("cc", max_iters=50)
+    base = GraphSession(graph_store, cache_mode=0).run("cc", max_iters=50)
     np.testing.assert_array_equal(res.values, base.values)
     if mode > 0:
-        assert eng.cache.stats.hits > 0
+        assert sess.stats.hits > 0
 
 
 def test_cache_reduces_disk_bytes(graph_store):
-    miss = VSWEngine(graph_store, apps.pagerank(), cache_mode=0)
-    hit = VSWEngine(graph_store, apps.pagerank(), cache_mode=4,
-                    cache_budget_bytes=1 << 28)
-    miss.run(max_iters=5)
-    hit.run(max_iters=5)
-    assert hit.cache.stats.disk_bytes < miss.cache.stats.disk_bytes
+    miss = GraphSession(graph_store, cache_mode=0)
+    hit = GraphSession(graph_store, cache_mode=1, cache_budget_bytes=1 << 28)
+    miss.run("pagerank", max_iters=5)
+    hit.run("pagerank", max_iters=5)
+    assert hit.stats.disk_bytes < miss.stats.disk_bytes
 
 
 def test_checkpoint_resume_equivalence(graph_store, tmp_path):
     """Kill-and-resume yields the same fixpoint as an uninterrupted run."""
-    full = VSWEngine(graph_store, apps.pagerank())
-    r_full = full.run(max_iters=20)
-    part = VSWEngine(graph_store, apps.pagerank())
-    part.run(max_iters=10, checkpoint_dir=str(tmp_path), checkpoint_every=5)
+    r_full = GraphSession(graph_store).run("pagerank", max_iters=20)
+    part = GraphSession(graph_store)
+    part.run("pagerank", max_iters=10,
+             checkpoint_dir=str(tmp_path), checkpoint_every=5)
     assert latest_checkpoint(str(tmp_path)) is not None
-    resumed = VSWEngine(graph_store, apps.pagerank())
-    r2 = resumed.run(max_iters=20, checkpoint_dir=str(tmp_path), resume=True)
+    resumed = GraphSession(graph_store)
+    r2 = resumed.run("pagerank", max_iters=20,
+                     checkpoint_dir=str(tmp_path), resume=True)
     np.testing.assert_allclose(r2.values, r_full.values, atol=1e-6)
 
 
 def test_preprocess_once_run_many(graph_store):
-    """The paper's reuse property: one store serves all applications."""
-    for prog in (apps.pagerank(), apps.sssp(0), apps.cc(), apps.bfs(0)):
-        res = VSWEngine(graph_store, prog).run(max_iters=10)
+    """The paper's reuse property: one session serves all applications."""
+    sess = GraphSession(graph_store, cache_mode=1, cache_budget_bytes=1 << 28)
+    results = sess.run_many(
+        ["pagerank", ("sssp", {"source": 0}), "cc", ("bfs", {"source": 0})],
+        max_iters=10)
+    assert len(results) == 4
+    for res in results:
         assert np.isfinite(res.values[np.isfinite(res.values)]).all()
+
+
+def test_legacy_engine_shim_still_works(graph_store):
+    """The pre-session VSWEngine kwarg signature warns but still runs."""
+    with pytest.warns(DeprecationWarning):
+        eng = VSWEngine(graph_store, apps.cc(), cache_mode=1,
+                        cache_budget_bytes=1 << 24)
+    res = eng.run(max_iters=50)
+    base = GraphSession(graph_store, cache_mode=0).run("cc", max_iters=50)
+    np.testing.assert_array_equal(res.values, base.values)
+
+
+def test_engine_from_explicit_config(graph_store):
+    cfg = EngineConfig(cache_mode=2, cache_budget_bytes=1 << 24,
+                       selective_threshold=1e-3)
+    eng = VSWEngine(graph_store, apps.cc(), cfg)
+    res = eng.run(max_iters=50)
+    assert res.converged
+    assert eng.config == cfg
