@@ -52,6 +52,17 @@ def main():
                   f"for sssp+cc (warm cache), "
                   f"hit ratio {session.stats.hit_ratio:.2f}")
 
+            print("4) batched multi-source: 8 landmark SSSPs, ONE edge sweep")
+            disk_before = session.stats.disk_bytes
+            landmarks = top.tolist() + [0, 1, 2]
+            batch = session.run_batch("sssp", sources=landmarks,
+                                      max_iters=100)
+            reached = [int(np.isfinite(r.values).sum()) for r in batch]
+            print(f"   {len(batch)} frontiers, per-landmark iterations "
+                  f"{[r.iterations for r in batch]}, reached {reached}")
+            print(f"   extra disk for all {len(batch)} queries: "
+                  f"{(session.stats.disk_bytes - disk_before)/1e6:.2f}MB")
+
 
 if __name__ == "__main__":
     main()

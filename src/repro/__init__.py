@@ -20,11 +20,13 @@ _EXPORTS = {
     "EngineConfig": ("repro.core.engine", "EngineConfig"),
     "VSWEngine": ("repro.core.engine", "VSWEngine"),
     "RunResult": ("repro.core.engine", "RunResult"),
+    "BatchRunResult": ("repro.core.engine", "BatchRunResult"),
     "IterationStats": ("repro.core.engine", "IterationStats"),
     "register_app": ("repro.core.apps", "register_app"),
     "get_app": ("repro.core.apps", "get_app"),
     "available_apps": ("repro.core.apps", "available_apps"),
     "VertexProgram": ("repro.core.apps", "VertexProgram"),
+    "BatchedVertexProgram": ("repro.core.apps", "BatchedVertexProgram"),
     "CompressedShardCache": ("repro.core.cache", "CompressedShardCache"),
     "GraphStore": ("repro.graph.storage", "GraphStore"),
     "write_edge_list": ("repro.graph.storage", "write_edge_list"),

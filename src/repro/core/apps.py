@@ -74,6 +74,9 @@ class VertexProgram:
     changed: Callable[[Array, Array], Array]
     # identity the engine substitutes for intervals with no processed edges
     needs_all_edges: bool = False  # True => every vertex recomputed each iter (PR)
+    # frontier vertex ids this program was built for (() if source-free);
+    # checkpoints record them so resume can reject a different run's state
+    sources: tuple = ()
 
 
 @register_app
@@ -123,6 +126,7 @@ def sssp(source: int = 0) -> VertexProgram:
         gather_transform=lambda values, out_deg: values,
         post=lambda partial, old, n: jnp.minimum(partial, old),
         changed=lambda new, old: new < old,
+        sources=(source,),
     )
 
 
@@ -147,6 +151,120 @@ def cc() -> VertexProgram:
         gather_transform=lambda values, out_deg: values,
         post=lambda partial, old, n: jnp.minimum(partial, old),
         changed=lambda new, old: new < old,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-source programs: one VSW sweep serves K frontiers
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BatchedVertexProgram:
+    """K independent frontiers sharing one edge sweep (paper §2.2 economics,
+    amortized across *queries* instead of applications).
+
+    Values are [n, K] matrices; column k is exactly the single-source program
+    for source k.  ``post`` additionally receives the *global* destination
+    row ids of its slice so per-column reset vectors (personalized PageRank's
+    seed one-hot) can be evaluated without materializing [n, K] constants.
+    """
+
+    name: str
+    semiring: str
+    value_dtype: np.dtype
+    columns: int  # K, static: the jitted shard step specializes per K
+    # (n, in_deg, out_deg) -> (values [n, K], active [n, K] bool)
+    init: Callable[[int, np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray]]
+    # (values [n_pad, K], out_deg [n_pad]) -> x pulled along in-edges
+    gather_transform: Callable[[Array, Array], Array]
+    # (partial [R, K], old [R, K], rows [R] global ids, num_vertices) -> new
+    post: Callable[[Array, Array, Array, int], Array]
+    # (new [n, K], old [n, K]) -> bool mask of updated (vertex, column) pairs
+    changed: Callable[[Array, Array], Array]
+    # the K frontier vertex ids, column order; checkpoints record them so
+    # resume rejects state from a different landmark/seed set
+    sources: tuple = ()
+
+
+def _check_sources(sources) -> tuple[int, ...]:
+    sources = tuple(int(s) for s in sources)
+    if not sources:
+        raise ValueError("need at least one source vertex")
+    if any(s < 0 for s in sources):
+        # negative ids would wrap under numpy indexing and silently compute
+        # a plausible-looking column for vertex n+s
+        raise ValueError(f"source vertex ids must be >= 0, got {sources}")
+    return sources
+
+
+@register_app
+def sssp_multi(sources=(0,)) -> BatchedVertexProgram:
+    """K single-source shortest-path queries in one engine run."""
+    sources = _check_sources(sources)
+    K = len(sources)
+
+    def init(n, in_deg, out_deg):
+        v = np.full((n, K), _INF, dtype=np.float32)
+        active = np.zeros((n, K), dtype=bool)
+        for k, s in enumerate(sources):
+            v[s, k] = 0.0
+            active[s, k] = True  # each column starts at its own source
+        return v, active
+
+    return BatchedVertexProgram(
+        name="sssp_multi",
+        semiring="min_plus",
+        value_dtype=np.float32,
+        columns=K,
+        init=init,
+        gather_transform=lambda values, out_deg: values,
+        post=lambda partial, old, rows, n: jnp.minimum(partial, old),
+        changed=lambda new, old: new < old,
+        sources=sources,
+    )
+
+
+@register_app
+def bfs_multi(sources=(0,)) -> BatchedVertexProgram:
+    """K hop-distance queries (SSSP over unit edge weights)."""
+    p = sssp_multi(sources)
+    return dataclasses.replace(p, name="bfs_multi")
+
+
+@register_app
+def personalized_pagerank(seeds=(0,), damping: float = 0.85,
+                          tol: float = 1e-6) -> BatchedVertexProgram:
+    """K personalized-PageRank columns: pr_k = (1-d)·e_seed_k + d·Aᵀpr_k.
+
+    The reset vector differs per column, which is why batched ``post`` sees
+    the global row ids: the seed one-hot is computed on the [R, K] slice.
+    Same relative-tol convergence rule as the global ``pagerank``.
+    """
+    seeds = _check_sources(seeds)
+    K = len(seeds)
+    seeds_np = np.asarray(seeds, dtype=np.int64)
+
+    def init(n, in_deg, out_deg):
+        v = np.zeros((n, K), dtype=np.float32)
+        v[seeds_np, np.arange(K)] = 1.0  # all mass starts on the seed
+        return v, np.ones((n, K), dtype=bool)
+
+    def gather(values, out_deg):
+        return values / jnp.maximum(out_deg, 1).astype(values.dtype)[:, None]
+
+    def post(partial, old, rows, n):
+        reset = (rows[:, None] == jnp.asarray(seeds_np)[None, :])
+        return jnp.where(reset, 1.0 - damping, 0.0) + damping * partial
+
+    return BatchedVertexProgram(
+        name="personalized_pagerank",
+        semiring="plus_src",
+        value_dtype=np.float32,
+        columns=K,
+        init=init,
+        gather_transform=gather,
+        post=post,
+        changed=lambda new, old: jnp.abs(new - old) > tol * jnp.abs(old) + 1e-30,
+        sources=seeds,
     )
 
 

@@ -35,11 +35,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.apps import VertexProgram
+from repro.core.apps import BatchedVertexProgram, VertexProgram
 from repro.core.cache import CompressedShardCache
 from repro.core.shards import ELLShard
 from repro.graph.storage import GraphStore
-from repro.kernels.spmv.ops import ell_spmv
+from repro.kernels.spmv.ops import ell_spmv, ell_spmv_batch
 
 _VALID_CACHE_MODES = (0, 1, 2, 3, 4)
 
@@ -170,6 +170,46 @@ class RunResult:
         return processed / max(self.total_seconds, 1e-9)
 
 
+@dataclasses.dataclass
+class BatchRunResult(RunResult):
+    """Result of a batched (multi-frontier) run: ``values`` is [n, K].
+
+    ``iterations``/``history``/``converged`` describe the shared sweep;
+    ``column_iterations[k]`` counts only the iterations column k entered with
+    a non-empty frontier (its honest cost — a landmark that converged in 4
+    hops does not get billed for the 40-hop straggler's sweeps).  The counts
+    are checkpointed, so they span resume boundaries even though ``history``
+    only covers the current run.
+    """
+
+    column_iterations: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
+    column_converged: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=bool))
+
+    @property
+    def num_columns(self) -> int:
+        return self.values.shape[1]
+
+    def column(self, k: int) -> RunResult:
+        """Per-column view as a plain RunResult.
+
+        ``iterations`` is the lifetime sweep count (spans resumes);
+        ``history`` covers only this run, truncated to the iterations the
+        column was live for here.  Frontiers only shrink, so a column live
+        at a resume point was live for the entire pre-resume prefix —
+        lifetime count minus the resume offset is its in-run live count.
+        """
+        iters = int(self.column_iterations[k])
+        pre = self.history[0].iteration if self.history else 0
+        return RunResult(values=self.values[:, k], iterations=iters,
+                         history=self.history[: max(0, iters - pre)],
+                         converged=bool(self.column_converged[k]))
+
+    def columns(self) -> list[RunResult]:
+        return [self.column(k) for k in range(self.num_columns)]
+
+
 _LEGACY_KWARGS = ("cache_mode", "cache_budget_bytes", "selective_threshold",
                   "use_pallas", "preload")
 
@@ -217,6 +257,7 @@ class VSWEngine:
         self.config = config or EngineConfig()
         self.store = store
         self.program = program
+        self.batched = isinstance(program, BatchedVertexProgram)
         self.cache = cache if cache is not None else CompressedShardCache(
             store, mode=self.config.cache_mode,
             budget_bytes=self.config.cache_budget_bytes)
@@ -268,14 +309,28 @@ class VSWEngine:
         def gather_fn(values):
             return program.gather_transform(values, self._out_deg_dev)
 
-        def shard_step(dst, x, src, cols, vals, row_map, start, num_rows):
-            R = cols.shape[0]
-            seg = ell_spmv(x, cols, vals, row_map, R, semiring, use_pallas=use_pallas)
-            old_slice = jax.lax.dynamic_slice(src, (start,), (R,))
-            new_slice = program.post(seg, old_slice, n).astype(dst.dtype)
-            keep = jnp.arange(R) < num_rows
-            new_slice = jnp.where(keep, new_slice, old_slice)
-            return jax.lax.dynamic_update_slice(dst, new_slice, (start,))
+        if self.batched:
+            # [n_pad, K] value matrix: one edge sweep advances K frontiers.
+            def shard_step(dst, x, src, cols, vals, row_map, start, num_rows):
+                R = cols.shape[0]
+                K = src.shape[1]
+                seg = ell_spmv_batch(x, cols, vals, row_map, R, semiring,
+                                     use_pallas=use_pallas)
+                old_slice = jax.lax.dynamic_slice(src, (start, 0), (R, K))
+                rows = start + jnp.arange(R)
+                new_slice = program.post(seg, old_slice, rows, n).astype(dst.dtype)
+                keep = (jnp.arange(R) < num_rows)[:, None]
+                new_slice = jnp.where(keep, new_slice, old_slice)
+                return jax.lax.dynamic_update_slice(dst, new_slice, (start, 0))
+        else:
+            def shard_step(dst, x, src, cols, vals, row_map, start, num_rows):
+                R = cols.shape[0]
+                seg = ell_spmv(x, cols, vals, row_map, R, semiring, use_pallas=use_pallas)
+                old_slice = jax.lax.dynamic_slice(src, (start,), (R,))
+                new_slice = program.post(seg, old_slice, n).astype(dst.dtype)
+                keep = jnp.arange(R) < num_rows
+                new_slice = jnp.where(keep, new_slice, old_slice)
+                return jax.lax.dynamic_update_slice(dst, new_slice, (start,))
 
         # one jit per ELL (R, W) bucket happens automatically via shape polymorphism
         self._shard_step = jax.jit(shard_step, donate_argnums=(0,))
@@ -288,6 +343,11 @@ class VSWEngine:
         self._changed_fn = changed_fn
 
     # ------------------------------------------------------------------
+    @property
+    def _ckpt_tag(self) -> str:
+        """Program identity recorded in checkpoints: name + frontier ids."""
+        return f"{self.program.name}:{tuple(self.program.sources)}"
+
     def _get_shard(self, p: int) -> ELLShard:
         if p in self._preloaded:
             return self._preloaded[p]
@@ -313,16 +373,45 @@ class VSWEngine:
     ) -> Iterator[IterationStats]:
         """Generator form of ``run``: yields an IterationStats after every
         iteration (live monitoring), returns the RunResult on exhaustion
-        (also stored in ``self.last_result``)."""
+        (also stored in ``self.last_result``).  Batched programs return a
+        ``BatchRunResult`` with [n, K] values and per-column accounting."""
         values, active_mask = self.program.init(self.n, self.in_deg, self.out_deg)
         start_iter = 0
+        ck_col_iters = None
         if resume and checkpoint_dir:
             ck = latest_checkpoint(checkpoint_dir)
             if ck is not None:
-                values, active_mask, start_iter = ck
-        vpad = np.pad(values.astype(np.float32), (0, self.n_pad - self.n))
+                if ck[0].shape != values.shape:
+                    raise ValueError(
+                        f"checkpoint in {checkpoint_dir!r} holds values of "
+                        f"shape {ck[0].shape}, but this program expects "
+                        f"{values.shape}; it belongs to a different run")
+                if ck[4] is not None and ck[4] != self._ckpt_tag:
+                    # same shapes, different program or landmark/seed set —
+                    # continuing would return the OLD frontiers labeled with
+                    # the caller's sources
+                    raise ValueError(
+                        f"checkpoint in {checkpoint_dir!r} was written by "
+                        f"{ck[4]!r}, not {self._ckpt_tag!r}; it belongs to "
+                        f"a different run")
+                values, active_mask, start_iter, ck_col_iters = ck[:4]
+        pad = self.n_pad - self.n
+        if self.batched:
+            vpad = np.pad(values.astype(np.float32), ((0, pad), (0, 0)))
+            # per-column frontiers: a shard is skipped only when NO column's
+            # active set touches it, so schedule over the union of frontiers
+            row_active = active_mask.any(axis=1)
+            col_live = active_mask.any(axis=0)
+            # batched checkpoints always carry per-column counts
+            col_iters = (ck_col_iters.astype(np.int64)
+                         if ck_col_iters is not None
+                         else np.zeros(self.program.columns, dtype=np.int64))
+        else:
+            vpad = np.pad(values.astype(np.float32), (0, pad))
+            row_active = active_mask
+            col_live = col_iters = None
         src = jnp.asarray(vpad)
-        active_ids = np.nonzero(active_mask)[0]
+        active_ids = np.nonzero(row_active)[0]
         active_ratio = active_ids.size / self.n
         history: list[IterationStats] = []
         converged = False
@@ -331,10 +420,14 @@ class VSWEngine:
         for it in range(start_iter, max_iters):
             t0 = time.time()
             disk0 = self.cache.stats.disk_bytes
+            hits0, misses0 = self.cache.stats.hits, self.cache.stats.misses
             schedule, selective = self._schedule(active_ids, active_ratio)
             if not schedule:
                 converged = True
                 break
+            if self.batched:
+                # bill this sweep only to columns still holding a frontier
+                col_iters += col_live
             x = self._gather_fn(src)
             dst = src  # donated into shard steps; untouched intervals keep old values
             dst = dst + 0.0  # materialize a copy so src survives for `changed`
@@ -348,9 +441,16 @@ class VSWEngine:
                 )
             changed = np.asarray(self._changed_fn(dst, src))
             last_changed = changed
-            active_ids = np.nonzero(changed)[0]
+            if self.batched:
+                col_live = changed.any(axis=0)
+                row_active = changed.any(axis=1)
+            else:
+                row_active = changed
+            active_ids = np.nonzero(row_active)[0]
             active_ratio = active_ids.size / self.n
             src = dst
+            d_hits = self.cache.stats.hits - hits0
+            d_total = d_hits + self.cache.stats.misses - misses0
             stats = IterationStats(
                 iteration=it,
                 seconds=time.time() - t0,
@@ -358,13 +458,15 @@ class VSWEngine:
                 shards_processed=len(schedule),
                 shards_skipped=self.P - len(schedule),
                 disk_bytes=self.cache.stats.disk_bytes - disk0,
-                cache_hit_ratio=self.cache.stats.hit_ratio,
+                cache_hit_ratio=d_hits / d_total if d_total else 0.0,
                 selective_enabled=selective,
                 edges_processed=sum(self._shard_nnz[p] for p in schedule),
             )
             history.append(stats)
             if checkpoint_dir and checkpoint_every and (it + 1) % checkpoint_every == 0:
-                save_checkpoint(checkpoint_dir, np.asarray(src[: self.n]), changed, it + 1)
+                save_checkpoint(checkpoint_dir, np.asarray(src[: self.n]),
+                                changed, it + 1, col_iters=col_iters,
+                                tag=self._ckpt_tag)
             yield stats
             if active_ids.size == 0:
                 converged = True
@@ -373,11 +475,21 @@ class VSWEngine:
         final = np.asarray(src[: self.n])
         if checkpoint_dir:
             # persist the true active mask — a resumed run must see exactly
-            # the frontier the interrupted run would have used next
+            # the frontier the interrupted run would have used next (for
+            # batched runs this is the full per-column [n, K] frontier)
             save_checkpoint(checkpoint_dir, final, last_changed,
-                            len(history) + start_iter)
-        result = RunResult(values=final, iterations=len(history),
-                           history=history, converged=converged)
+                            len(history) + start_iter, col_iters=col_iters,
+                            tag=self._ckpt_tag)
+        if self.batched:
+            # global convergence (empty union frontier / empty schedule)
+            # implies no column can ever update again
+            result: RunResult = BatchRunResult(
+                values=final, iterations=len(history), history=history,
+                converged=converged, column_iterations=col_iters,
+                column_converged=np.asarray(~col_live | converged))
+        else:
+            result = RunResult(values=final, iterations=len(history),
+                               history=history, converged=converged)
         self.last_result = result
         return result
 
@@ -398,11 +510,22 @@ class VSWEngine:
 
 
 # ---------------------------------------------------------------------------
-def save_checkpoint(ckpt_dir: str, values: np.ndarray, active: np.ndarray, iteration: int) -> None:
+def save_checkpoint(ckpt_dir: str, values: np.ndarray, active: np.ndarray,
+                    iteration: int, col_iters: np.ndarray | None = None,
+                    tag: str | None = None) -> None:
     d = Path(ckpt_dir)
     d.mkdir(parents=True, exist_ok=True)
     tmp = d / f".tmp_ckpt_{iteration:06d}.npz"
-    np.savez(tmp, values=values, active=active, iteration=np.int64(iteration))
+    payload = dict(values=values, active=active, iteration=np.int64(iteration))
+    if col_iters is not None:
+        # batched runs: per-column sweep counts survive the interruption so
+        # resumed accounting stays honest
+        payload["col_iters"] = np.asarray(col_iters, dtype=np.int64)
+    if tag is not None:
+        # program identity (name + frontier ids): resume refuses state from
+        # a different program or landmark/seed set
+        payload["tag"] = np.asarray(tag)
+    np.savez(tmp, **payload)
     os.replace(tmp, d / f"ckpt_{iteration:06d}.npz")  # atomic publish
     with open(d / "latest.json.tmp", "w") as f:
         json.dump({"iteration": iteration}, f)
@@ -424,4 +547,6 @@ def latest_checkpoint(ckpt_dir: str):
     if not p.exists():
         return None
     with np.load(p) as z:
-        return z["values"], z["active"], int(z["iteration"])
+        col_iters = z["col_iters"] if "col_iters" in z.files else None
+        tag = str(z["tag"]) if "tag" in z.files else None
+        return z["values"], z["active"], int(z["iteration"]), col_iters, tag

@@ -54,3 +54,24 @@ def ell_spmv(x, cols, vals, row_map, num_segments: int, semiring: str,
     xg = x[jnp.where(cols >= 0, cols, 0)]
     partials = ell_fold(xg, vals, cols, semiring, use_pallas=use_pallas)
     return _ref.segment_combine(partials, row_map, num_segments, semiring)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "num_segments", "use_pallas"))
+def ell_spmv_batch(x, cols, vals, row_map, num_segments: int, semiring: str,
+                   use_pallas="auto"):
+    """Batched shard update: one edge pass serves K frontiers.
+
+    x: [n, K] resident source matrix; returns [num_segments, K] partials —
+    column k is exactly ``ell_spmv(x[:, k], ...)``.  The gather reads each
+    edge's K source values together; the fold streams the [R, W] edge tiles
+    once and reduces every column against them.
+    """
+    xg = x[jnp.where(cols >= 0, cols, 0)]      # [R, W, K]
+    use, interp = _resolve(use_pallas)
+    if use:
+        folded = _pallas.ell_fold_batch_pallas(
+            jnp.transpose(xg, (2, 0, 1)), vals, cols, semiring, interpret=interp)
+        partials = jnp.transpose(folded[:, :, 0], (1, 0))  # [R, K]
+    else:
+        partials = _ref.ell_fold_batch_ref(xg, vals, cols, semiring)
+    return _ref.segment_combine_batch(partials, row_map, num_segments, semiring)

@@ -36,6 +36,19 @@ def ell_gather_fold_ref(x_blk: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray
     return sem.fold(vals, xg, mask, axis=-1)[:, None]
 
 
+def ell_fold_batch_ref(xg: jnp.ndarray, vals: jnp.ndarray, cols: jnp.ndarray,
+                       semiring: Semiring | str) -> jnp.ndarray:
+    """Batched fold: [R, W, K] gathered sources + shared [R, W] edges -> [R, K].
+
+    One read of the edge tile serves all K columns (the batched-frontier
+    amortization); ``cols < 0`` slots contribute the reduce identity in
+    every column.
+    """
+    sem = _as_semiring(semiring)
+    mask = cols >= 0
+    return sem.fold_batch(vals, xg, mask)
+
+
 def segment_combine(partials: jnp.ndarray, row_map: jnp.ndarray,
                     num_segments: int, semiring: Semiring | str) -> jnp.ndarray:
     """Fold wrapped ELL rows of the same destination: [R] -> [num_segments]."""
@@ -44,6 +57,16 @@ def segment_combine(partials: jnp.ndarray, row_map: jnp.ndarray,
     if sem.is_plus:
         return jax.ops.segment_sum(p, row_map, num_segments=num_segments)
     return jax.ops.segment_min(p, row_map, num_segments=num_segments)
+
+
+def segment_combine_batch(partials: jnp.ndarray, row_map: jnp.ndarray,
+                          num_segments: int, semiring: Semiring | str) -> jnp.ndarray:
+    """Batched wrapped-row fold: [R, K] -> [num_segments, K] (segment ids
+    index the leading axis, so every column folds in one segment op)."""
+    sem = _as_semiring(semiring)
+    if sem.is_plus:
+        return jax.ops.segment_sum(partials, row_map, num_segments=num_segments)
+    return jax.ops.segment_min(partials, row_map, num_segments=num_segments)
 
 
 def ell_spmv_ref(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
@@ -58,3 +81,13 @@ def ell_spmv_ref(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
     xg = x[jnp.where(mask, cols, 0)]
     partials = ell_fold_ref(xg, vals, cols, semiring)
     return segment_combine(partials, row_map, num_segments, semiring)
+
+
+def ell_spmv_batch_ref(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                       row_map: jnp.ndarray, num_segments: int,
+                       semiring: Semiring | str) -> jnp.ndarray:
+    """Batched shard update oracle: x is [n, K] -> [num_segments, K]."""
+    mask = cols >= 0
+    xg = x[jnp.where(mask, cols, 0)]          # [R, W, K]
+    partials = ell_fold_batch_ref(xg, vals, cols, semiring)
+    return segment_combine_batch(partials, row_map, num_segments, semiring)

@@ -81,6 +81,55 @@ def ell_fold_pallas(xg: jnp.ndarray, vals: jnp.ndarray, cols: jnp.ndarray,
     )(xg, vals, cols)
 
 
+def _ell_fold_batch_kernel(xg_ref, vals_ref, cols_ref, out_ref, *, sem: Semiring):
+    w_step = pl.program_id(2)
+    # xg block is (1, tr, tw): one column's tile against the shared edge tile.
+    # The K grid axis revisits each (i, j) edge block once per column, so
+    # HBM-level edge traffic still scales with K — the batching amortizes the
+    # disk + decompression + host→device tier (the system bottleneck), not
+    # VMEM streaming.  A K-resident block layout is the follow-up if kernel
+    # bandwidth ever dominates.
+    partial = _fold_tile(sem, vals_ref[...], xg_ref[0], cols_ref[...])
+
+    @pl.when(w_step == 0)
+    def _init():
+        out_ref[0] = partial
+
+    @pl.when(w_step != 0)
+    def _acc():
+        out_ref[0] = sem.reduce(out_ref[0], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "tr", "tw", "interpret"))
+def ell_fold_batch_pallas(xg: jnp.ndarray, vals: jnp.ndarray, cols: jnp.ndarray,
+                          semiring: str, tr: int = DEFAULT_TR,
+                          tw: int = DEFAULT_TW,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Batched fold: [K, R, W] gathered sources + shared [R, W] edges -> [K, R, 1].
+
+    Grid is (K, rows/TR, W/TW) with the W axis innermost-sequential, exactly
+    like ``ell_fold_pallas`` — the K axis just revisits the same edge tiles
+    with a different source column.
+    """
+    sem = _as_semiring(semiring)
+    K, R, W = xg.shape
+    tr = min(tr, R)
+    tw = min(tw, W)
+    grid = (K, pl.cdiv(R, tr), pl.cdiv(W, tw))
+    return pl.pallas_call(
+        functools.partial(_ell_fold_batch_kernel, sem=sem),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tr, tw), lambda k, i, j: (k, i, j)),
+            pl.BlockSpec((tr, tw), lambda k, i, j: (i, j)),
+            pl.BlockSpec((tr, tw), lambda k, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tr, 1), lambda k, i, j: (k, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, R, 1), xg.dtype),
+        interpret=interpret,
+    )(xg, vals, cols)
+
+
 def _ell_gather_fold_kernel(x_ref, cols_ref, vals_ref, out_ref, *, sem: Semiring):
     w_step = pl.program_id(1)
     cols = cols_ref[...]

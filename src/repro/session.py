@@ -19,21 +19,38 @@ per-shard Bloom filters, and a per-program cache of constructed engines
 Applications dispatch through the ``@register_app`` registry
 (core/apps.py) by name, or a ``VertexProgram`` can be passed directly.
 ``run_many`` batches several applications; ``iter_run`` yields an
-``IterationStats`` per iteration for live monitoring.
+``IterationStats`` per iteration for live monitoring; ``run_batch``
+answers K single-source queries (SSSP/BFS landmarks, personalized-PageRank
+seeds) through ONE sweep of the edge shards per iteration:
+
+    dists = s.run_batch("sssp", sources=[0, 17, 4095])   # 3 frontiers,
+    # ...one [n, 3] value matrix, one pass of disk + decompression
 """
 from __future__ import annotations
 
 import os
+from collections import OrderedDict
 from typing import Iterable, Iterator
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.apps import VertexProgram, get_app
+from repro.core.apps import BatchedVertexProgram, VertexProgram, get_app
 from repro.core.cache import CompressedShardCache
-from repro.core.engine import (EngineConfig, IterationStats, RunResult,
-                               VSWEngine)
+from repro.core.engine import (BatchRunResult, EngineConfig, IterationStats,
+                               RunResult, VSWEngine)
 from repro.graph.storage import GraphStore
+
+# run_batch accepts the single-source names and maps them onto the batched
+# program factories (which are also directly addressable by name).
+_BATCH_ALIASES = {
+    "sssp": "sssp_multi",
+    "bfs": "bfs_multi",
+    "pagerank": "personalized_pagerank",
+    "ppr": "personalized_pagerank",
+}
+# factories whose source parameter is called "seeds" (PPR vocabulary)
+_SEED_PARAM_APPS = {"personalized_pagerank"}
 
 
 class GraphSession:
@@ -47,10 +64,16 @@ class GraphSession:
         ``EngineConfig`` shared by every engine the session builds.  When
         omitted it comes from ``EngineConfig.from_env()``; extra keyword
         arguments (``cache_budget_bytes=...``, ...) override single fields.
+    max_engines:
+        LRU bound on cached engines.  Engines are keyed by (program,
+        config) — for ``run_batch`` that includes the sources tuple — so a
+        long-lived session answering many distinct landmark sets would
+        otherwise retain one jitted engine per set forever.
     """
 
     def __init__(self, store: GraphStore | str | os.PathLike,
-                 config: EngineConfig | None = None, **overrides):
+                 config: EngineConfig | None = None, max_engines: int = 16,
+                 **overrides):
         if not isinstance(store, GraphStore):
             store = GraphStore(store)
         if config is None:
@@ -72,11 +95,17 @@ class GraphSession:
         # device-resident padded out-degrees, shared by every engine
         self.out_deg_dev = jnp.asarray(
             np.pad(self.out_deg, (0, self.n_pad - self.n)).astype(np.float32))
-        self._engines: dict = {}
+        if max_engines < 1:
+            raise ValueError(f"max_engines must be >= 1, got {max_engines}")
+        self.max_engines = max_engines
+        self._engines: "OrderedDict" = OrderedDict()
+        # combined [n, K] result of the most recent run_batch (survives
+        # engine-cache eviction, unlike engine(...).last_result)
+        self.last_batch_result: BatchRunResult | None = None
 
     # -- engine construction / reuse ------------------------------------
     def _resolve(self, app, app_kwargs) -> tuple[VertexProgram, object]:
-        if isinstance(app, VertexProgram):
+        if isinstance(app, (VertexProgram, BatchedVertexProgram)):
             if app_kwargs:
                 raise TypeError(
                     "application kwargs only apply when dispatching by name; "
@@ -98,6 +127,10 @@ class GraphSession:
                 # a raw-id key must keep the program alive to stay unique
                 eng._keyed_program = program
             self._engines[key] = eng
+            while len(self._engines) > self.max_engines:
+                self._engines.popitem(last=False)  # drop the LRU engine
+        else:
+            self._engines.move_to_end(key)
         return eng
 
     # -- running --------------------------------------------------------
@@ -129,6 +162,66 @@ class GraphSession:
         eng = self.engine(app, config, **app_kwargs)
         return eng.iter_run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
                             checkpoint_every=checkpoint_every, resume=resume)
+
+    def run_batch(self, app: str | BatchedVertexProgram = "sssp", *,
+                  sources: Iterable[int] | None = None, max_iters: int = 200,
+                  checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+                  resume: bool = False, config: EngineConfig | None = None,
+                  **app_kwargs) -> list[RunResult]:
+        """K single-source queries through ONE sweep of the edge shards.
+
+        ``sources`` gives one frontier per column; ``app`` is a single-source
+        name ("sssp"/"bfs"/"pagerank"), a batched factory name
+        ("sssp_multi"/"bfs_multi"/"personalized_pagerank"), or a
+        ``BatchedVertexProgram``.  Each iteration pays disk + decompression
+        for a shard once and advances every column against it, so K landmark
+        queries cost close to one query's I/O instead of K (paper §2.2's
+        amortization, applied across *queries*).
+
+        Returns one ``RunResult`` per source, in order, with honest
+        per-column iteration counts (a column is only billed for sweeps it
+        entered with a live frontier).  The combined ``BatchRunResult``
+        ([n, K] values, shared history) stays available as
+        ``session.last_batch_result`` until the next ``run_batch`` call.
+        """
+        if isinstance(app, BatchedVertexProgram):
+            if sources is not None:
+                raise TypeError(
+                    "sources= only applies when dispatching by name; the "
+                    "BatchedVertexProgram already fixes its frontiers")
+            # forward app_kwargs so misuse raises like run() does
+            eng = self.engine(app, config, **app_kwargs)
+        else:
+            name = _BATCH_ALIASES.get(app, app)
+            param = "seeds" if name in _SEED_PARAM_APPS else "sources"
+            if sources is not None:
+                if param in app_kwargs:
+                    raise TypeError(
+                        f"pass sources= or {param}=, not both")
+                app_kwargs[param] = tuple(int(s) for s in sources)
+            elif param in app_kwargs:
+                # the factory's own vocabulary (e.g. seeds= for PPR) works too
+                app_kwargs[param] = tuple(int(s) for s in app_kwargs[param])
+            else:
+                raise TypeError("run_batch needs sources=[...] when "
+                                "dispatching by name")
+            # name-keyed dispatch so repeat calls reuse the engine (and its
+            # jitted [n, K] shard steps) via the session's engine cache
+            try:
+                eng = self.engine(name, config, **app_kwargs)
+            except TypeError as exc:
+                if f"unexpected keyword argument {param!r}" in str(exc):
+                    # the factory has no frontier parameter at all
+                    raise TypeError(
+                        f"{name!r} is not a batched application") from None
+                raise  # genuine bad kwarg — keep the factory's own message
+        if not eng.batched:
+            raise TypeError(f"{app!r} is not a batched application")
+        result = eng.run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
+                         checkpoint_every=checkpoint_every, resume=resume)
+        assert isinstance(result, BatchRunResult)
+        self.last_batch_result = result
+        return result.columns()
 
     def run_many(self, apps: Iterable, **run_kwargs) -> list[RunResult]:
         """Run several applications back-to-back over the shared cache.

@@ -1,11 +1,15 @@
 """Fault-tolerance integration: kill a real training process mid-run, resume
-from its checkpoints, verify the loss trajectory continues (DESIGN.md §6)."""
+from its checkpoints, verify the loss trajectory continues (DESIGN.md §6) —
+plus checkpoint/resume of batched multi-frontier graph runs."""
 import os
 import signal
 import subprocess
 import sys
 import time
 from pathlib import Path
+
+import numpy as np
+import pytest
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -55,3 +59,95 @@ def test_uninterrupted_run_completes(tmp_path):
     r = _run_train(tmp_path / "ck2", steps=15)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "done: 15 steps" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# batched multi-frontier runs: checkpoint mid-run, resume, exact [n, K] match
+# ---------------------------------------------------------------------------
+def test_batched_checkpoint_resume_reproduces_uninterrupted(graph_store,
+                                                            tmp_path):
+    """An interrupted K-frontier run, resumed from its checkpoint, lands on
+    exactly the uninterrupted run's final [n, K] values — and the checkpoint
+    it resumes from stores the full per-column active frontier."""
+    from repro.core.engine import latest_checkpoint
+    from repro.session import GraphSession
+
+    sources = (0, 7, 19, 42)
+    K = len(sources)
+    n = graph_store.num_vertices
+    full = GraphSession(graph_store).run_batch("sssp", sources=sources,
+                                               max_iters=40)
+
+    # interrupt after 3 iterations; the final save persists iteration 3
+    part_dir = tmp_path / "part"
+    GraphSession(graph_store).run_batch("sssp", sources=sources, max_iters=3,
+                                        checkpoint_dir=str(part_dir))
+    ck = latest_checkpoint(str(part_dir))
+    assert ck is not None
+    values, active, it, col_iters, tag = ck
+    assert it == 3
+    assert values.shape == (n, K)
+    assert active.shape == (n, K) and active.dtype == bool
+    assert col_iters is not None and col_iters.shape == (K,)
+    assert (col_iters <= 3).all() and col_iters.max() == 3
+    assert tag == f"sssp_multi:{sources}"
+    # the per-column frontier is the real one: a 3-hop SSSP frontier is
+    # strictly per-column (columns started from different sources differ)
+    assert active.any(), "mid-run frontier must be non-empty"
+    assert any(not np.array_equal(active[:, 0], active[:, k])
+               for k in range(1, K)), "frontier lost its per-column shape"
+
+    # resume to completion and compare element-wise with the uninterrupted run
+    resumed = GraphSession(graph_store).run_batch(
+        "sssp", sources=sources, max_iters=40,
+        checkpoint_dir=str(part_dir), resume=True)
+    for k in range(K):
+        np.testing.assert_array_equal(resumed[k].values, full[k].values)
+        assert resumed[k].converged
+        # per-column accounting spans the interruption: the resumed run
+        # reports the same lifetime sweep count as the uninterrupted one,
+        # while its history only bills the post-resume live iterations
+        assert resumed[k].iterations == full[k].iterations
+        assert len(resumed[k].history) == max(0, resumed[k].iterations - 3)
+
+
+def test_batched_resume_rejects_checkpoint_from_different_run(graph_store,
+                                                              tmp_path):
+    """Resuming with a different K must fail loudly, not silently return the
+    old run's frontiers labeled with the new sources."""
+    from repro.session import GraphSession
+
+    GraphSession(graph_store).run_batch("sssp", sources=(0, 1, 2),
+                                        max_iters=2,
+                                        checkpoint_dir=str(tmp_path))
+    # different K: caught by the value-shape check
+    with pytest.raises(ValueError, match="different run"):
+        GraphSession(graph_store).run_batch("sssp", sources=(5, 9),
+                                            max_iters=10, resume=True,
+                                            checkpoint_dir=str(tmp_path))
+    # same K, different landmark set: caught by the program tag
+    with pytest.raises(ValueError, match="different run"):
+        GraphSession(graph_store).run_batch("sssp", sources=(5, 9, 11),
+                                            max_iters=10, resume=True,
+                                            checkpoint_dir=str(tmp_path))
+
+
+def test_batched_midrun_checkpoint_equals_uninterrupted_state(graph_store,
+                                                              tmp_path):
+    """The checkpoint a periodic saver writes at iteration i is bit-identical
+    (values AND per-column frontier) to a run stopped at exactly i."""
+    from repro.session import GraphSession
+
+    sources = (1, 5)
+    a_dir, b_dir = tmp_path / "a", tmp_path / "b"
+    # A: stop at iteration 2 (final save publishes values + true frontier)
+    GraphSession(graph_store).run_batch("sssp", sources=sources, max_iters=2,
+                                        checkpoint_dir=str(a_dir))
+    # B: run further but snapshot every 2 iterations
+    GraphSession(graph_store).run_batch("sssp", sources=sources, max_iters=6,
+                                        checkpoint_dir=str(b_dir),
+                                        checkpoint_every=2)
+    with np.load(a_dir / "ckpt_000002.npz") as za, \
+            np.load(b_dir / "ckpt_000002.npz") as zb:
+        np.testing.assert_array_equal(za["values"], zb["values"])
+        np.testing.assert_array_equal(za["active"], zb["active"])

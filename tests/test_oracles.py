@@ -1,0 +1,144 @@
+"""Oracle harness: every engine configuration vs independent NumPy references.
+
+The rest of the suite mostly cross-checks apps against each other or against
+a single configuration; this module is the independent ground truth.  The
+oracles below are straight-line NumPy (no jax, no shards, no semiring
+machinery) implementing the textbook definitions, and every (cache mode 0-4)
+× (use_pallas False/"auto") engine configuration must reproduce them on a
+random graph — exactly for the min-propagation apps, to float tolerance for
+PageRank.
+"""
+import numpy as np
+import pytest
+
+from repro.graph.preprocess import preprocess_graph
+from repro.graph.storage import write_edge_list
+from repro.session import GraphSession
+
+# ---------------------------------------------------------------------------
+# pure-NumPy reference implementations (independent of the engine stack)
+# ---------------------------------------------------------------------------
+
+
+def oracle_pagerank(src, dst, n, iters, damping=0.85):
+    out_deg = np.bincount(src, minlength=n)
+    pr = np.full(n, 1.0 / n, dtype=np.float64)
+    for _ in range(iters):
+        s = np.zeros(n, dtype=np.float64)
+        np.add.at(s, dst, (pr / np.maximum(out_deg, 1))[src])
+        pr = (1.0 - damping) / n + damping * s
+    return pr
+
+
+def oracle_sssp(src, dst, n, source, weight=1.0):
+    """Bellman-Ford relaxation to fixpoint (unit weights on these graphs)."""
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    for _ in range(n):
+        relaxed = dist.copy()
+        np.minimum.at(relaxed, dst, dist[src] + weight)
+        if (relaxed == dist).all():
+            break
+        dist = relaxed
+    return dist
+
+
+def oracle_bfs(src, dst, n, source):
+    """Level-by-level frontier expansion over the directed edges."""
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    frontier = np.zeros(n, dtype=bool)
+    frontier[source] = True
+    level = 0
+    while frontier.any():
+        level += 1
+        hop = np.zeros(n, dtype=bool)
+        hop[dst[frontier[src]]] = True
+        hop &= np.isinf(dist)
+        dist[hop] = level
+        frontier = hop
+    return dist
+
+
+def oracle_cc(src, dst, n):
+    """Fixpoint of directed min-label propagation (the engine's CC
+    semantics: labels flow along edge direction only)."""
+    label = np.arange(n, dtype=np.float64)
+    while True:
+        new = label.copy()
+        np.minimum.at(new, dst, label[src])
+        if (new == label).all():
+            return label
+        label = new
+
+
+# ---------------------------------------------------------------------------
+# one random graph, every engine configuration
+# ---------------------------------------------------------------------------
+N = 384
+PR_ITERS = 15
+
+
+@pytest.fixture(scope="module")
+def oracle_graph(tmp_path_factory):
+    rng = np.random.default_rng(1234)
+    m = 6 * N
+    src = rng.integers(0, N, size=m)
+    dst = rng.integers(0, N, size=m)
+    base = tmp_path_factory.mktemp("oracle_graph")
+    write_edge_list(base / "el", [(src, dst)], num_vertices=N)
+    store = preprocess_graph(str(base / "el"), str(base / "store"),
+                             threshold_edge_num=512, ell_max_width=128)
+    assert store.num_shards > 1  # the sweep must cross shard boundaries
+    return src, dst, store
+
+
+CONFIGS = [pytest.param(mode, up, id=f"mode{mode}-{'pallas' if up == 'auto' else 'jnp'}")
+           for mode in (0, 1, 2, 3, 4) for up in (False, "auto")]
+
+
+def _session(store, mode, use_pallas):
+    return GraphSession(store, cache_mode=mode, cache_budget_bytes=1 << 24,
+                        use_pallas=use_pallas)
+
+
+@pytest.mark.parametrize("mode,use_pallas", CONFIGS)
+def test_pagerank_vs_oracle(oracle_graph, mode, use_pallas):
+    src, dst, store = oracle_graph
+    res = _session(store, mode, use_pallas).run("pagerank", max_iters=PR_ITERS)
+    np.testing.assert_allclose(
+        res.values, oracle_pagerank(src, dst, N, PR_ITERS), atol=1e-6)
+
+
+@pytest.mark.parametrize("mode,use_pallas", CONFIGS)
+def test_sssp_vs_oracle(oracle_graph, mode, use_pallas):
+    src, dst, store = oracle_graph
+    res = _session(store, mode, use_pallas).run("sssp", source=5, max_iters=200)
+    assert res.converged
+    np.testing.assert_array_equal(res.values, oracle_sssp(src, dst, N, 5))
+
+
+@pytest.mark.parametrize("mode,use_pallas", CONFIGS)
+def test_bfs_vs_oracle(oracle_graph, mode, use_pallas):
+    src, dst, store = oracle_graph
+    res = _session(store, mode, use_pallas).run("bfs", source=7, max_iters=200)
+    assert res.converged
+    np.testing.assert_array_equal(res.values, oracle_bfs(src, dst, N, 7))
+
+
+@pytest.mark.parametrize("mode,use_pallas", CONFIGS)
+def test_cc_vs_oracle(oracle_graph, mode, use_pallas):
+    src, dst, store = oracle_graph
+    res = _session(store, mode, use_pallas).run("cc", max_iters=300)
+    assert res.converged
+    np.testing.assert_array_equal(res.values, oracle_cc(src, dst, N))
+
+
+def test_bfs_and_sssp_oracles_agree():
+    """Unit-weight SSSP and BFS levels are the same function — a sanity
+    check on the references themselves."""
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 64, size=256)
+    dst = rng.integers(0, 64, size=256)
+    np.testing.assert_array_equal(oracle_sssp(src, dst, 64, 0),
+                                  oracle_bfs(src, dst, 64, 0))

@@ -71,6 +71,21 @@ def test_rerun_reuses_engine_and_jit_caches(graph_store):
     assert e2.cache is e1.cache is sess.cache
 
 
+def test_engine_cache_is_lru_bounded(graph_store):
+    """A long-lived session answering many distinct landmark sets must not
+    retain one jitted engine per set forever."""
+    sess = GraphSession(graph_store, max_engines=2)
+    keep = sess.engine("sssp", source=0)
+    evicted = sess.engine("sssp", source=1)
+    assert sess.engine("sssp", source=0) is keep  # LRU bump
+    sess.engine("sssp", source=2)                 # evicts source=1
+    assert len(sess._engines) == 2
+    assert sess.engine("sssp", source=0) is keep       # survivor kept identity
+    assert sess.engine("sssp", source=1) is not evicted  # rebuilt after evict
+    with pytest.raises(ValueError, match="max_engines"):
+        GraphSession(graph_store, max_engines=0)
+
+
 # ---------------------------------------------------------------------------
 # (b) registry round-trip
 # ---------------------------------------------------------------------------
@@ -196,3 +211,80 @@ def test_run_many_order_and_types(graph_store):
     results = sess.run_many(
         ["cc", ("sssp", {"source": 0}), apps.bfs(0)], max_iters=5)
     assert [type(r) for r in results] == [RunResult] * 3
+
+
+# ---------------------------------------------------------------------------
+# (e) cache invariants under arbitrary access sequences
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", [0, 1, 2, 3, 4])
+def test_cache_budget_invariant_under_random_gets(graph_store, mode):
+    """cached_bytes <= budget must hold after EVERY get, in every mode, even
+    with a budget too small to hold the whole graph."""
+    from repro.core.cache import CompressedShardCache
+    budget = max(graph_store.shard_nbytes(0) * 2, 1 << 16)
+    cache = CompressedShardCache(graph_store, mode=mode, budget_bytes=budget)
+    rng = np.random.default_rng(mode)
+    for sid in rng.integers(0, graph_store.num_shards, size=60):
+        shard = cache.get(int(sid))
+        assert shard.shard_id == int(sid)
+        assert cache.cached_bytes <= cache.budget
+    assert cache.stats.hits + cache.stats.misses == 60
+
+
+def test_cache_stats_count_correctly(graph_store):
+    """hits/misses/evictions against a hand-walked access sequence."""
+    from repro.core.cache import CompressedShardCache
+    cache = CompressedShardCache(graph_store, mode=1, budget_bytes=1 << 28)
+    cache.get(0)            # miss
+    cache.get(0)            # hit
+    cache.get(1)            # miss
+    cache.get(0)            # hit
+    assert (cache.stats.hits, cache.stats.misses) == (2, 2)
+    assert cache.stats.hit_ratio == pytest.approx(0.5)
+    assert cache.stats.evictions == 0
+    # budget that fits exactly one cached shard forces one eviction per swap
+    e0 = cache._entry_nbytes(cache.get(0))
+    e1 = cache._entry_nbytes(cache.get(1))
+    tight = CompressedShardCache(graph_store, mode=1,
+                                 budget_bytes=max(e0, e1))
+    tight.get(0)
+    assert tight.cached_shards == 1
+    tight.get(1)  # fits, but only after evicting shard 0
+    assert tight.cached_bytes <= tight.budget
+    tight.get(0)
+    assert tight.stats.hits == 0  # every access was a fresh read
+    assert tight.stats.evictions == 2
+
+
+def test_cache_clear_rereads_from_disk_and_keeps_stats(graph_store):
+    from repro.core.cache import CompressedShardCache
+    cache = CompressedShardCache(graph_store, mode=1, budget_bytes=1 << 28)
+    cache.get(0)
+    cache.get(0)
+    hits, misses = cache.stats.hits, cache.stats.misses
+    disk = cache.stats.disk_bytes
+    cache.clear()
+    assert cache.cached_bytes == 0 and cache.cached_shards == 0
+    # stats survive the clear (lifetime counters, not per-epoch)
+    assert (cache.stats.hits, cache.stats.misses) == (hits, misses)
+    cache.get(0)  # must be a disk re-read, not a stale hit
+    assert cache.stats.misses == misses + 1
+    assert cache.stats.disk_bytes > disk
+
+
+# ---------------------------------------------------------------------------
+# (f) per-iteration cache_hit_ratio (regression: was the lifetime ratio)
+# ---------------------------------------------------------------------------
+def test_iteration_hit_ratio_is_per_iteration_not_lifetime(graph_store):
+    """A warm-cache second run must report hit ratio 1.0 for EVERY iteration;
+    the old code reported the cache's lifetime ratio, which the cold first
+    run drags permanently below 1."""
+    total = graph_store.total_shard_bytes()
+    sess = GraphSession(graph_store, cache_mode=1, cache_budget_bytes=4 * total)
+    first = sess.run("cc", max_iters=5)
+    # iteration 0 of the cold run reads everything from disk
+    assert first.history[0].cache_hit_ratio == 0.0
+    assert all(h.cache_hit_ratio == 1.0 for h in first.history[1:])
+    second = sess.run("pagerank", max_iters=5)
+    assert sess.stats.hit_ratio < 1.0  # lifetime ratio includes cold misses
+    assert all(h.cache_hit_ratio == 1.0 for h in second.history)
