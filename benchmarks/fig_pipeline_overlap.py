@@ -1,0 +1,73 @@
+"""Async shard pipeline: edges/sec and stall time vs prefetch depth.
+
+The claim under measurement (ISSUE 3 tentpole): streaming shards through the
+double-buffered ``ShardPipeline`` hides fetch + decompress + host->device
+staging behind the SpMV (paper §2.3's overlap), so edges/sec rises and the
+compute loop's stall time falls as ``prefetch_depth`` grows — while disk
+bytes stay EXACTLY constant (the single ordered prefetch worker preserves
+the cache access sequence).  Measured for depth ∈ {0, 1, 2, 4} on the npz
+and packed backends, cold cache (every shard misses: the full fetch cost is
+on the table) and warm cache (only staging is left to hide).
+"""
+from __future__ import annotations
+
+from benchmarks.common import get_store, row
+from repro.core import apps  # noqa: F401  (registers the standard programs)
+from repro.session import GraphSession
+
+DEPTHS = (0, 1, 2, 4)
+BACKENDS = ("npz", "packed")
+MAX_ITERS = 8
+REPS = 2
+
+
+def _measure(path: str, backend: str, depth: int, warm: bool):
+    # cold = cache mode 0: EVERY iteration pays the full backend fetch (the
+    # overlap target); warm = mode 1 with the whole graph resident, so only
+    # host->device staging is left to hide
+    with GraphSession(path, backend=backend, cache_mode=1 if warm else 0,
+                      prefetch_depth=depth) as sess:
+        sess.run("pagerank", max_iters=1)  # warm the jit caches (not measured)
+        if warm:
+            sess.warm()
+        # best of REPS: on small CI boxes a stray scheduler hiccup in one rep
+        # otherwise swamps the overlap effect under measurement
+        best = None
+        disk = None
+        for _ in range(REPS):
+            disk0 = sess.stats.disk_bytes
+            res = sess.run("pagerank", max_iters=MAX_ITERS)
+            d = sess.stats.disk_bytes - disk0
+            assert disk is None or d == disk  # accounting is deterministic
+            disk = d
+            cur = (res.edges_per_second(), d,
+                   sum(h.stall_seconds for h in res.history),
+                   sum(h.fetch_seconds for h in res.history),
+                   res.total_seconds)
+            if best is None or cur[0] > best[0]:
+                best = cur
+        return best
+
+
+def run() -> list[str]:
+    out = []
+    store = get_store()
+    path = str(store.path)
+    for backend in BACKENDS:
+        for warm in (False, True):
+            label = "warm" if warm else "cold"
+            disk_seen = set()
+            for depth in DEPTHS:
+                eps, disk, stall, fetch, secs = _measure(path, backend,
+                                                         depth, warm)
+                disk_seen.add(disk)
+                out.append(row(
+                    f"fig_pipeline_{backend}_{label}_depth{depth}",
+                    secs * 1e6,
+                    f"edges_per_s={eps:.3g};stall_s={stall:.3f};"
+                    f"fetch_s={fetch:.3f};disk_MB={disk/1e6:.1f}"))
+            # accounting must not drift with overlap depth
+            out.append(row(
+                f"fig_pipeline_{backend}_{label}_disk_invariant", 0.0,
+                f"identical={'yes' if len(disk_seen) == 1 else 'NO'}"))
+    return out

@@ -33,8 +33,10 @@ def main():
               f"{store.num_vertices} vertices")
 
         print("3) one session, three applications, one shared cache")
-        with GraphSession(store, cache_mode=1,
-                          cache_budget_bytes=1 << 28) as session:
+        # prefetch_depth=1: double-buffer shard fetch/staging behind the SpMV
+        with GraphSession(f"{td}/graph", cache_mode=1,
+                          cache_budget_bytes=1 << 28,
+                          prefetch_depth=1) as session:
             result = session.run("pagerank", max_iters=30)
             top = np.argsort(result.values)[-5:][::-1]
             print(f"   pagerank: {result.iterations} iterations, "

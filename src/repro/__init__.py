@@ -28,7 +28,13 @@ _EXPORTS = {
     "VertexProgram": ("repro.core.apps", "VertexProgram"),
     "BatchedVertexProgram": ("repro.core.apps", "BatchedVertexProgram"),
     "CompressedShardCache": ("repro.core.cache", "CompressedShardCache"),
+    "ShardPipeline": ("repro.core.pipeline", "ShardPipeline"),
+    "ShardSource": ("repro.graph.source", "ShardSource"),
+    "MissingGraphError": ("repro.graph.source", "MissingGraphError"),
     "GraphStore": ("repro.graph.storage", "GraphStore"),
+    "PackedGraphStore": ("repro.graph.packed", "PackedGraphStore"),
+    "MemoryGraphStore": ("repro.graph.memory", "MemoryGraphStore"),
+    "pack_graph": ("repro.graph.packed", "pack_graph"),
     "write_edge_list": ("repro.graph.storage", "write_edge_list"),
     "preprocess_graph": ("repro.graph.preprocess", "preprocess_graph"),
     "rmat_edges": ("repro.graph.generate", "rmat_edges"),

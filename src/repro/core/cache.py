@@ -15,16 +15,19 @@ verbatim from the paper.
 (*the paper's γ₁=2 reflects that its disk format is CSV-ish while its cache
 is binary; our disk format is already binary ELL, so γ₁=1. The selection
 rule is unchanged.)
+
+The cache sits on any ``ShardSource`` backend (npz directory, packed file,
+in-memory — graph/source.py) and is **thread-safe**: the ShardPipeline calls
+``get`` from a prefetch thread while stats are read from the main loop, so
+every get/clear and every ``CacheStats`` update happens under one lock.
 """
 from __future__ import annotations
 
 import dataclasses
-import io as _io
+import threading
 import time
 import warnings
 from collections import OrderedDict
-
-import numpy as np
 
 try:
     import zstandard
@@ -32,10 +35,13 @@ except ImportError:  # optional: modes 2-4 degrade to raw caching (mode 1)
     zstandard = None
 
 from repro.core.shards import ELLShard
-from repro.graph.storage import GraphStore
+from repro.graph.source import ShardSource, unpack_shard_npz
 
 GAMMA = {0: 1.0, 1: 1.0, 2: 2.0, 3: 4.0, 4: 5.0}
 ZSTD_LEVEL = {2: 1, 3: 3, 4: 9}
+
+# canonical blob decoder, shared with the storage backends
+_unpack = unpack_shard_npz
 
 
 def auto_select_mode(graph_bytes: int, cache_budget_bytes: int) -> int:
@@ -48,6 +54,8 @@ def auto_select_mode(graph_bytes: int, cache_budget_bytes: int) -> int:
 
 @dataclasses.dataclass
 class CacheStats:
+    """Lifetime counters; mutate through ``bump`` (atomic under a lock)."""
+
     hits: int = 0
     misses: int = 0
     disk_bytes: int = 0
@@ -55,49 +63,24 @@ class CacheStats:
     compress_seconds: float = 0.0
     evictions: int = 0
 
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def bump(self, **deltas) -> None:
+        with self._lock:
+            for field, delta in deltas.items():
+                setattr(self, field, getattr(self, field) + delta)
+
     @property
     def hit_ratio(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
 
-def _pack(shard: ELLShard) -> bytes:
-    buf = _io.BytesIO()
-    mask = shard.cols >= 0
-    unit = bool(np.array_equal(shard.vals, mask.astype(np.float32)))
-    payload = dict(
-        cols=shard.cols,
-        row_map=shard.row_map,
-        meta=np.array([shard.start_vertex, shard.end_vertex, shard.nnz,
-                       int(unit)], dtype=np.int64),
-    )
-    if not unit:
-        payload["vals"] = shard.vals
-    np.savez(buf, **payload)
-    return buf.getvalue()
-
-
-def _unpack(shard_id: int, blob: bytes) -> ELLShard:
-    with np.load(_io.BytesIO(blob)) as z:
-        meta = z["meta"]
-        cols = z["cols"]
-        unit = len(meta) > 3 and bool(meta[3])
-        vals = (cols >= 0).astype(np.float32) if unit else z["vals"]
-        return ELLShard(
-            shard_id=shard_id,
-            start_vertex=int(meta[0]),
-            end_vertex=int(meta[1]),
-            nnz=int(meta[2]),
-            cols=cols,
-            vals=vals,
-            row_map=z["row_map"],
-        )
-
-
 class CompressedShardCache:
-    """LRU cache over shard blobs with byte budget; wraps a GraphStore."""
+    """LRU cache over shard blobs with byte budget; wraps a ShardSource."""
 
-    def __init__(self, store: GraphStore, mode: int | str = "auto",
+    def __init__(self, store: ShardSource, mode: int | str = "auto",
                  budget_bytes: int = 1 << 30):
         self.store = store
         self.budget = int(budget_bytes)
@@ -113,6 +96,7 @@ class CompressedShardCache:
         self.stats = CacheStats()
         self._lru: OrderedDict[int, bytes | ELLShard] = OrderedDict()
         self._bytes = 0
+        self._lock = threading.RLock()  # one prefetch thread + main loop
         self._cctx = (
             zstandard.ZstdCompressor(level=ZSTD_LEVEL[self.mode])
             if self.mode in ZSTD_LEVEL else None
@@ -136,48 +120,55 @@ class CompressedShardCache:
         while self._bytes + need > self.budget and self._lru:
             _, old = self._lru.popitem(last=False)
             self._bytes -= self._entry_nbytes(old)
-            self.stats.evictions += 1
+            self.stats.bump(evictions=1)
 
     def get(self, shard_id: int) -> ELLShard:
-        if self.mode == 0:
-            self.stats.misses += 1
-            self.stats.disk_bytes += self.store.shard_nbytes(shard_id)
-            return self.store.read_shard(shard_id)
-        if shard_id in self._lru:
-            self.stats.hits += 1
-            entry = self._lru.pop(shard_id)
-            self._lru[shard_id] = entry  # LRU bump
-            if isinstance(entry, bytes):
+        with self._lock:
+            if self.mode == 0:
+                self.stats.bump(misses=1,
+                                disk_bytes=self.store.shard_nbytes(shard_id))
+                return self.store.read_shard(shard_id)
+            if shard_id in self._lru:
+                entry = self._lru.pop(shard_id)
+                self._lru[shard_id] = entry  # LRU bump
+                if isinstance(entry, bytes):
+                    t = time.perf_counter()
+                    blob = self._dctx.decompress(entry)
+                    self.stats.bump(hits=1, decompress_seconds=time.perf_counter() - t)
+                    return _unpack(shard_id, blob)
+                self.stats.bump(hits=1)
+                return entry
+            # miss: disk read, then insert if it fits
+            self.stats.bump(misses=1,
+                            disk_bytes=self.store.shard_nbytes(shard_id))
+            if self.mode == 1:
+                shard = self.store.read_shard(shard_id)
+                entry: bytes | ELLShard = shard
+            else:
+                # compress the canonical blob straight off the backend — no
+                # decode->re-encode round trip on the miss path
+                blob = self.store.read_shard_bytes(shard_id)
+                shard = _unpack(shard_id, blob)
                 t = time.perf_counter()
-                blob = self._dctx.decompress(entry)
-                self.stats.decompress_seconds += time.perf_counter() - t
-                return _unpack(shard_id, blob)
-            return entry
-        # miss: disk read, then insert if it fits
-        self.stats.misses += 1
-        self.stats.disk_bytes += self.store.shard_nbytes(shard_id)
-        shard = self.store.read_shard(shard_id)
-        if self.mode == 1:
-            entry: bytes | ELLShard = shard
-        else:
-            t = time.perf_counter()
-            entry = self._cctx.compress(_pack(shard))
-            self.stats.compress_seconds += time.perf_counter() - t
-        need = self._entry_nbytes(entry)
-        if need <= self.budget:
-            self._evict_until(need)
-            self._lru[shard_id] = entry
-            self._bytes += need
-        return shard
+                entry = self._cctx.compress(blob)
+                self.stats.bump(compress_seconds=time.perf_counter() - t)
+            need = self._entry_nbytes(entry)
+            if need <= self.budget:
+                self._evict_until(need)
+                self._lru[shard_id] = entry
+                self._bytes += need
+            return shard
 
     def clear(self) -> None:
         """Drop every cached entry (budget and stats are kept)."""
-        self._lru.clear()
-        self._bytes = 0
+        with self._lock:
+            self._lru.clear()
+            self._bytes = 0
 
     def measured_ratio(self) -> float:
         """Achieved compression ratio over currently cached shards."""
-        if self.mode in (0, 1) or not self._lru:
-            return 1.0
-        raw = sum(self.store.shard_nbytes(i) for i in self._lru)
-        return raw / max(self._bytes, 1)
+        with self._lock:
+            if self.mode in (0, 1) or not self._lru:
+                return 1.0
+            raw = sum(self.store.shard_nbytes(i) for i in self._lru)
+            return raw / max(self._bytes, 1)

@@ -5,7 +5,11 @@ Faithful structure:
     (vertices never touch disk until the final checkpoint) — VSW's core claim;
   * edges stream shard-by-shard through the compressed cache (host tier) to
     the device; each shard updates exactly its destination interval, so the
-    update is single-writer and lock/atomic-free;
+    update is single-writer and lock/atomic-free.  The stream runs through a
+    ``ShardPipeline``: with ``config.prefetch_depth > 0`` the next shards'
+    disk reads, decompression and host->device staging happen on a background
+    thread while the current shard's SpMV runs (paper §2.3's overlap;
+    depth 1 = double buffering, depth 0 = the synchronous path);
   * after each iteration the active-vertex set is extracted; when
     ``active_ratio < selective_threshold`` (paper: 0.001) the per-shard Bloom
     filters gate shard loading (Algorithm 2 line 5).
@@ -37,8 +41,9 @@ import numpy as np
 
 from repro.core.apps import BatchedVertexProgram, VertexProgram
 from repro.core.cache import CompressedShardCache
+from repro.core.pipeline import ShardPipeline
 from repro.core.shards import ELLShard
-from repro.graph.storage import GraphStore
+from repro.graph.source import ShardSource
 from repro.kernels.spmv.ops import ell_spmv, ell_spmv_batch
 
 _VALID_CACHE_MODES = (0, 1, 2, 3, 4)
@@ -80,6 +85,10 @@ class EngineConfig:
     #                                         scheduling kicks in; <0 disables
     use_pallas: bool | str = "auto"         # SpMV kernel backend selection
     preload: bool = False                   # pin every shard at construction
+    prefetch_depth: int = 0                 # shards fetched ahead on a
+    #                                         background thread (0 = fetch
+    #                                         synchronously, the legacy path;
+    #                                         1 = double buffering)
 
     def __post_init__(self):
         mode = self.cache_mode
@@ -103,6 +112,12 @@ class EngineConfig:
             raise ValueError(
                 f"use_pallas must be True, False or 'auto', "
                 f"got {self.use_pallas!r}")
+        if not isinstance(self.prefetch_depth, int) \
+                or isinstance(self.prefetch_depth, bool) \
+                or self.prefetch_depth < 0:
+            raise ValueError(
+                f"prefetch_depth must be a non-negative int, "
+                f"got {self.prefetch_depth!r}")
 
     @classmethod
     def from_env(cls, **overrides) -> "EngineConfig":
@@ -118,6 +133,7 @@ class EngineConfig:
                             _cast_tristate),
             preload=_env("GRAPHMP_PRELOAD", cls.preload,
                          lambda r: _cast_tristate(r) is True),
+            prefetch_depth=_env("GRAPHMP_PREFETCH", cls.prefetch_depth, int),
         )
         base.update(overrides)
         return cls(**base)
@@ -137,6 +153,8 @@ class IterationStats:
     cache_hit_ratio: float
     selective_enabled: bool
     edges_processed: int = 0    # sum of nnz over the shards actually run
+    stall_seconds: float = 0.0  # time the compute loop waited on shard I/O
+    fetch_seconds: float = 0.0  # fetch+stage time (overlapped when prefetching)
 
 
 @dataclasses.dataclass
@@ -211,7 +229,7 @@ class BatchRunResult(RunResult):
 
 
 _LEGACY_KWARGS = ("cache_mode", "cache_budget_bytes", "selective_threshold",
-                  "use_pallas", "preload")
+                  "use_pallas", "preload", "prefetch_depth")
 
 
 class VSWEngine:
@@ -229,7 +247,7 @@ class VSWEngine:
 
     def __init__(
         self,
-        store: GraphStore,
+        store: ShardSource,
         program: VertexProgram,
         config: EngineConfig | int | str | None = None,
         *,
@@ -285,6 +303,11 @@ class VSWEngine:
         if self.preload:
             for p in range(self.P):
                 self._preloaded[p] = self.cache.get(p)
+        # ALL shard consumption goes through the pipeline — depth 0 is the
+        # synchronous path, depth >= 1 prefetches + stages on a worker thread
+        self._pipeline = ShardPipeline(self._get_shard,
+                                       depth=self.config.prefetch_depth,
+                                       stage=self._stage)
         self.last_result: RunResult | None = None
 
     @classmethod
@@ -352,6 +375,21 @@ class VSWEngine:
         if p in self._preloaded:
             return self._preloaded[p]
         return self.cache.get(p)
+
+    @staticmethod
+    def _materialize(arr: np.ndarray) -> np.ndarray:
+        """Read-only arrays are mmap-backed views (packed backend): copy them
+        so the page-in happens HERE — on the prefetch thread, hideable —
+        instead of via jax aliasing the mapping and faulting inside the SpMV
+        (which would also pin the mmap open past session close)."""
+        return arr if arr.flags.writeable else np.array(arr)
+
+    def _stage(self, shard: ELLShard):
+        """Host->device staging; runs on the prefetch thread when depth > 0,
+        so the transfer overlaps the previous shard's SpMV."""
+        return (jnp.asarray(self._materialize(shard.cols)),
+                jnp.asarray(self._materialize(shard.vals)),
+                jnp.asarray(self._materialize(shard.row_map)))
 
     def _schedule(self, active_ids: np.ndarray | None, active_ratio: float) -> tuple[list[int], bool]:
         """Algorithm 2 line 5: all shards, unless selective scheduling kicks in."""
@@ -421,6 +459,8 @@ class VSWEngine:
             t0 = time.time()
             disk0 = self.cache.stats.disk_bytes
             hits0, misses0 = self.cache.stats.hits, self.cache.stats.misses
+            stall0 = self._pipeline.stats.stall_seconds
+            fetch0 = self._pipeline.stats.fetch_seconds
             schedule, selective = self._schedule(active_ids, active_ratio)
             if not schedule:
                 converged = True
@@ -431,12 +471,10 @@ class VSWEngine:
             x = self._gather_fn(src)
             dst = src  # donated into shard steps; untouched intervals keep old values
             dst = dst + 0.0  # materialize a copy so src survives for `changed`
-            for p in schedule:
-                shard = self._get_shard(p)
+            for _p, shard, dev in self._pipeline.stream(schedule):
+                cols_dev, vals_dev, row_map_dev = dev
                 dst = self._shard_step(
-                    dst, x, src,
-                    jnp.asarray(shard.cols), jnp.asarray(shard.vals),
-                    jnp.asarray(shard.row_map),
+                    dst, x, src, cols_dev, vals_dev, row_map_dev,
                     shard.start_vertex, shard.end_vertex - shard.start_vertex,
                 )
             changed = np.asarray(self._changed_fn(dst, src))
@@ -461,6 +499,8 @@ class VSWEngine:
                 cache_hit_ratio=d_hits / d_total if d_total else 0.0,
                 selective_enabled=selective,
                 edges_processed=sum(self._shard_nnz[p] for p in schedule),
+                stall_seconds=self._pipeline.stats.stall_seconds - stall0,
+                fetch_seconds=self._pipeline.stats.fetch_seconds - fetch0,
             )
             history.append(stats)
             if checkpoint_dir and checkpoint_every and (it + 1) % checkpoint_every == 0:

@@ -1,0 +1,126 @@
+"""ShardPipeline: overlap shard fetch/decompress/staging with compute.
+
+GraphMP's thesis is hiding disk behind compute (paper §2.3; NXgraph and
+GraphH stream shards the same way).  The engine used to fetch every shard
+synchronously inside the iteration loop, serializing disk reads, npz
+parsing, cache decompression, and host->device staging with the Pallas
+SpMV.  The pipeline moves all of that onto ONE background thread feeding a
+bounded queue:
+
+    worker:  fetch(p) -> stage(shard) -> queue.put        (depth items ahead)
+    main  :  queue.get -> SpMV on the previous result
+
+``prefetch_depth`` is the queue bound — 1 is classic double buffering, 0 is
+the old synchronous path (same code path, no thread).  A SINGLE worker
+fetching in schedule order is deliberate: cache accesses happen in exactly
+the order the synchronous path would issue them, so hit/miss/eviction
+sequences — and therefore the Table-3 disk-byte accounting — are bit-for-bit
+identical at every depth.
+
+``stats`` separates the two sides of the overlap: ``stall_seconds`` is time
+the consumer spent blocked waiting on the queue (what prefetch is supposed
+to drive to zero) and ``fetch_seconds`` is background time spent producing
+shards (what it hides).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterator, Sequence
+
+from repro.core.shards import ELLShard
+
+_DONE = object()
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Producer/consumer accounting; all fields are lifetime accumulators."""
+
+    shards: int = 0           # shards delivered to the consumer
+    stall_seconds: float = 0.0  # consumer time blocked on the queue
+    fetch_seconds: float = 0.0  # producer time fetching + staging
+
+
+@dataclasses.dataclass
+class _Failure:
+    exc: BaseException
+
+
+class ShardPipeline:
+    """Streams ``(shard_id, shard, staged)`` for a schedule, ``depth`` ahead.
+
+    ``fetch``: shard_id -> ELLShard (typically ``cache.get``; must be safe to
+    call from one background thread — the CompressedShardCache is locked).
+    ``stage``: optional ELLShard -> anything; runs on the worker too, so
+    host->device transfers land off the critical path.  With ``depth == 0``
+    both run inline on the consumer thread (the synchronous path).
+    """
+
+    def __init__(self, fetch: Callable[[int], ELLShard], depth: int = 0,
+                 stage: Callable[[ELLShard], Any] | None = None):
+        if depth < 0:
+            raise ValueError(f"prefetch depth must be >= 0, got {depth}")
+        self.fetch = fetch
+        self.stage = stage
+        self.depth = int(depth)
+        self.stats = PipelineStats()
+
+    def _produce(self, p: int) -> tuple[int, ELLShard, Any]:
+        t0 = time.perf_counter()
+        shard = self.fetch(p)
+        staged = self.stage(shard) if self.stage is not None else None
+        self.stats.fetch_seconds += time.perf_counter() - t0
+        return p, shard, staged
+
+    def stream(self, schedule: Sequence[int]) -> Iterator[tuple[int, ELLShard, Any]]:
+        """Yield every shard of ``schedule`` in order, prefetching ahead."""
+        # a single-shard schedule has nothing to overlap with — skip the
+        # worker thread (same order, same accounting, no spawn cost)
+        if self.depth == 0 or len(schedule) < 2:
+            for p in schedule:
+                t0 = time.perf_counter()
+                item = self._produce(p)
+                # synchronous path: the consumer IS stalled for the whole fetch
+                self.stats.stall_seconds += time.perf_counter() - t0
+                self.stats.shards += 1
+                yield item
+            return
+
+        q: queue.Queue = queue.Queue(maxsize=self.depth)
+        cancel = threading.Event()
+
+        def worker() -> None:
+            try:
+                for p in schedule:
+                    if cancel.is_set():
+                        return
+                    q.put(self._produce(p))
+                q.put(_DONE)
+            except BaseException as exc:  # noqa: BLE001 — forwarded, re-raised
+                q.put(_Failure(exc))
+
+        t = threading.Thread(target=worker, name="shard-prefetch", daemon=True)
+        t.start()
+        try:
+            while True:
+                t0 = time.perf_counter()
+                item = q.get()
+                self.stats.stall_seconds += time.perf_counter() - t0
+                if item is _DONE:
+                    return
+                if isinstance(item, _Failure):
+                    raise item.exc
+                self.stats.shards += 1
+                yield item
+        finally:
+            cancel.set()
+            # unblock a worker parked on q.put, then reap it
+            while t.is_alive():
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    pass
+                t.join(timeout=0.05)

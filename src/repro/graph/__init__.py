@@ -1,3 +1,7 @@
 from repro.graph.generate import rmat_edges, uniform_edges, zipf_edges  # noqa: F401
+from repro.graph.source import (BytesCounter, MissingGraphError,  # noqa: F401
+                                ShardSource)
 from repro.graph.storage import GraphStore  # noqa: F401
+from repro.graph.packed import PackedGraphStore, pack_graph  # noqa: F401
+from repro.graph.memory import MemoryGraphStore  # noqa: F401
 from repro.graph.preprocess import preprocess_graph  # noqa: F401

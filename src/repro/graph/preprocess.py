@@ -73,7 +73,7 @@ def preprocess_graph(
                 rec = np.stack([src_s[lo:hi], dst_s[lo:hi]], axis=1)
             buf = rec.tobytes()
             scratch[p].write(buf)
-            store.io.written += len(buf)
+            store.io.add_written(len(buf))
     for f in scratch:
         f.close()
 
@@ -84,7 +84,7 @@ def preprocess_graph(
         sp = scratch_dir / f"s{p:05d}.bin"
         width = 3 if weighted else 2
         raw = np.fromfile(sp, dtype=np.int64).reshape(-1, width)
-        store.io.read += sp.stat().st_size
+        store.io.add_read(sp.stat().st_size)
         lo, hi = int(starts[p]), int(starts[p + 1])
         dst_local = raw[:, 1] - lo
         order = np.argsort(dst_local, kind="stable")

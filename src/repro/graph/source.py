@@ -1,0 +1,198 @@
+"""ShardSource: the storage-backend protocol the engine and cache talk to.
+
+GraphMP's data path only ever needs five things from storage — decoded
+shards, raw shard blobs, shard sizes, Bloom filters, and byte accounting —
+so that surface IS the protocol.  Everything above it (``CompressedShardCache``,
+``ShardPipeline``, ``VSWEngine``, ``GraphSession``) is backend-agnostic;
+backends below it ship in three flavours:
+
+  * ``repro.graph.storage.GraphStore``   — the original npz-per-shard directory
+  * ``repro.graph.packed.PackedGraphStore`` — one mmap'd file, zero-copy views
+  * ``repro.graph.memory.MemoryGraphStore`` — RAM-resident (tests/benchmarks)
+
+Disk-byte accounting (the paper's Table-3 metric) is **canonical**: every
+backend charges a shard read at the shard's canonical npz-blob size, so the
+reported byte counts are identical whichever backend served the run — figures
+stay comparable across backends and prefetch depths.  ``BytesCounter`` is
+thread-safe because the ``ShardPipeline`` fetches from background threads.
+"""
+from __future__ import annotations
+
+import io as _io
+import threading
+from typing import Iterable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.bloom import BloomFilter
+from repro.core.shards import ELLShard
+
+
+class MissingGraphError(FileNotFoundError):
+    """Raised when a path is not a preprocessed graph (no/invalid property.json)."""
+
+
+_REQUIRED_PROPERTIES = ("num_vertices", "num_edges", "num_shards",
+                        "intervals", "shards")
+
+
+def validate_properties(prop: dict, where: str) -> dict:
+    """Check a property dict has the keys every consumer relies on."""
+    missing = [k for k in _REQUIRED_PROPERTIES if k not in prop]
+    if missing:
+        raise MissingGraphError(
+            f"{where} is not a preprocessed graph: property.json lacks "
+            f"{missing}; run repro.graph.preprocess.preprocess_graph first")
+    return prop
+
+
+class BytesCounter:
+    """Thread-safe read/written byte tally.
+
+    Mutate through ``add_read``/``add_written`` (atomic under an internal
+    lock — prefetch threads and the main loop share one counter).  The
+    ``read``/``written`` attributes stay plain-readable, and their setters
+    keep legacy ``counter.read += n`` call sites working (those are only
+    atomic on a single thread; concurrent writers must use the adders).
+    """
+
+    __slots__ = ("_lock", "_read", "_written")
+
+    def __init__(self, read: int = 0, written: int = 0):
+        self._lock = threading.Lock()
+        self._read = int(read)
+        self._written = int(written)
+
+    def add_read(self, n: int) -> None:
+        with self._lock:
+            self._read += int(n)
+
+    def add_written(self, n: int) -> None:
+        with self._lock:
+            self._written += int(n)
+
+    @property
+    def read(self) -> int:
+        return self._read
+
+    @read.setter
+    def read(self, value: int) -> None:
+        with self._lock:
+            self._read = int(value)
+
+    @property
+    def written(self) -> int:
+        return self._written
+
+    @written.setter
+    def written(self, value: int) -> None:
+        with self._lock:
+            self._written = int(value)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._read = 0
+            self._written = 0
+
+    def __repr__(self) -> str:
+        return f"BytesCounter(read={self.read}, written={self.written})"
+
+
+# ---------------------------------------------------------------------------
+# canonical shard serialization (npz blob) — shared by every backend + cache
+# ---------------------------------------------------------------------------
+def pack_shard_npz(shard: ELLShard) -> bytes:
+    """Serialize a shard as the canonical npz blob (the on-disk npz format).
+
+    Unweighted graphs need no val array (paper §2.2): vals are unit and
+    reconstructed from the col mask on read.
+    """
+    buf = _io.BytesIO()
+    mask = shard.cols >= 0
+    unit = bool(np.array_equal(shard.vals, mask.astype(np.float32)))
+    payload = dict(
+        cols=shard.cols,
+        row_map=shard.row_map,
+        meta=np.array([shard.start_vertex, shard.end_vertex, shard.nnz,
+                       int(unit)], dtype=np.int64),
+    )
+    if not unit:
+        payload["vals"] = shard.vals
+    np.savez(buf, **payload)
+    return buf.getvalue()
+
+
+def unpack_shard_npz(shard_id: int, blob: bytes) -> ELLShard:
+    with np.load(_io.BytesIO(blob)) as z:
+        meta = z["meta"]
+        cols = z["cols"]
+        unit = len(meta) > 3 and bool(meta[3])
+        vals = (cols >= 0).astype(np.float32) if unit else z["vals"]
+        return ELLShard(
+            shard_id=shard_id,
+            start_vertex=int(meta[0]),
+            end_vertex=int(meta[1]),
+            nnz=int(meta[2]),
+            cols=cols,
+            vals=vals,
+            row_map=z["row_map"],
+        )
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class ShardSource(Protocol):
+    """Structural type of a storage backend (what the cache/engine require)."""
+
+    io: BytesCounter
+
+    @property
+    def properties(self) -> dict: ...
+    def read_vertex_info(self) -> tuple[np.ndarray, np.ndarray]: ...
+    def read_shard(self, shard_id: int) -> ELLShard: ...
+    def read_shard_bytes(self, shard_id: int) -> bytes: ...
+    def shard_nbytes(self, shard_id: int) -> int: ...
+    def read_bloom(self, shard_id: int) -> BloomFilter: ...
+
+
+class ShardSourceBase:
+    """Derived accessors shared by every backend (all come off ``properties``)."""
+
+    io: BytesCounter
+
+    @property
+    def properties(self) -> dict:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.properties["num_vertices"])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.properties["num_edges"])
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.properties["num_shards"])
+
+    @property
+    def intervals(self) -> np.ndarray:
+        return np.asarray(self.properties["intervals"], dtype=np.int64)
+
+    def shard_ids(self) -> Iterable[int]:
+        return range(self.num_shards)
+
+    def total_shard_bytes(self) -> int:
+        return sum(self.shard_nbytes(p) for p in self.shard_ids())
+
+    def shard_nbytes(self, shard_id: int) -> int:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def read_bloom(self, shard_id: int) -> BloomFilter:  # pragma: no cover
+        raise NotImplementedError
+
+    def read_all_blooms(self) -> list[BloomFilter]:
+        return [self.read_bloom(p) for p in self.shard_ids()]

@@ -1,4 +1,4 @@
-"""On-disk graph store: the paper's property file + vertex info + shard files.
+"""npz-directory backend: the paper's property file + vertex info + shard files.
 
 Layout of a preprocessed graph directory:
 
@@ -7,13 +7,14 @@ Layout of a preprocessed graph directory:
   bloom_<p>.npz          — per-shard Bloom filter over source vertices (§2.4.1)
   shard_<p>.npz          — blocked-ELL arrays (cols, vals, row_map) + metadata
 
-Every read/write is a real file operation; `BytesCounter` instruments the
-store so benchmarks report actual disk bytes, which is the paper's primary
-metric (Table 3).
+``GraphStore`` is one implementation of the ``ShardSource`` protocol
+(graph/source.py); the single-file mmap'd ``PackedGraphStore`` and the
+RAM-resident ``MemoryGraphStore`` are the others.  Every read/write here is a
+real file operation; the thread-safe ``BytesCounter`` instruments the store so
+benchmarks report actual disk bytes, the paper's primary metric (Table 3).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 from pathlib import Path
@@ -22,19 +23,15 @@ import numpy as np
 
 from repro.core.bloom import BloomFilter
 from repro.core.shards import ELLShard
+from repro.graph.source import (BytesCounter, MissingGraphError,
+                                ShardSourceBase, pack_shard_npz,
+                                unpack_shard_npz, validate_properties)
+
+__all__ = ["BytesCounter", "GraphStore", "MissingGraphError",
+           "write_edge_list", "iter_edge_list"]
 
 
-@dataclasses.dataclass
-class BytesCounter:
-    read: int = 0
-    written: int = 0
-
-    def reset(self) -> None:
-        self.read = 0
-        self.written = 0
-
-
-class GraphStore:
+class GraphStore(ShardSourceBase):
     def __init__(self, path: str | os.PathLike):
         self.path = Path(path)
         self.io = BytesCounter()
@@ -44,8 +41,21 @@ class GraphStore:
     @property
     def properties(self) -> dict:
         if self._prop is None:
-            with open(self.path / "property.json") as f:
-                self._prop = json.load(f)
+            p = self.path / "property.json"
+            if not p.is_file():
+                raise MissingGraphError(
+                    f"{str(self.path)!r} is not a preprocessed graph "
+                    "(no property.json); run "
+                    "repro.graph.preprocess.preprocess_graph first")
+            try:
+                with open(p) as f:
+                    prop = json.load(f)
+            except json.JSONDecodeError as exc:
+                raise MissingGraphError(
+                    f"{str(p)!r} is not valid JSON ({exc}); the graph "
+                    "directory is corrupt or half-written — re-run "
+                    "preprocess_graph") from exc
+            self._prop = validate_properties(prop, repr(str(self.path)))
         return self._prop
 
     def write_properties(self, prop: dict) -> None:
@@ -56,32 +66,16 @@ class GraphStore:
         os.replace(tmp, self.path / "property.json")
         self._prop = prop
 
-    @property
-    def num_vertices(self) -> int:
-        return int(self.properties["num_vertices"])
-
-    @property
-    def num_edges(self) -> int:
-        return int(self.properties["num_edges"])
-
-    @property
-    def num_shards(self) -> int:
-        return int(self.properties["num_shards"])
-
-    @property
-    def intervals(self) -> np.ndarray:
-        return np.asarray(self.properties["intervals"], dtype=np.int64)
-
     # ---- vertex info ----------------------------------------------------
     def write_vertex_info(self, in_degree: np.ndarray, out_degree: np.ndarray) -> None:
         p = self.path / "vertex_info.npz"
         np.savez(p, in_degree=in_degree, out_degree=out_degree)
-        self.io.written += p.stat().st_size
+        self.io.add_written(p.stat().st_size)
 
     def read_vertex_info(self) -> tuple[np.ndarray, np.ndarray]:
         p = self.path / "vertex_info.npz"
         with np.load(p) as z:
-            self.io.read += p.stat().st_size
+            self.io.add_read(p.stat().st_size)
             return z["in_degree"], z["out_degree"]
 
     # ---- shards ----------------------------------------------------------
@@ -89,68 +83,34 @@ class GraphStore:
         return self.path / f"shard_{shard_id:05d}.npz"
 
     def write_shard(self, shard: ELLShard) -> None:
-        p = self.shard_path(shard.shard_id)
-        # unweighted graphs need no val array (paper §2.2) — vals are unit and
-        # reconstructed from the col mask on read.
-        mask = shard.cols >= 0
-        unit = bool(np.array_equal(shard.vals, mask.astype(np.float32)))
-        payload = dict(
-            cols=shard.cols,
-            row_map=shard.row_map,
-            meta=np.array([shard.start_vertex, shard.end_vertex, shard.nnz,
-                           int(unit)], dtype=np.int64),
-        )
-        if not unit:
-            payload["vals"] = shard.vals
-        np.savez(p, **payload)
-        self.io.written += p.stat().st_size
+        blob = pack_shard_npz(shard)
+        self.shard_path(shard.shard_id).write_bytes(blob)
+        self.io.add_written(len(blob))
 
     def read_shard(self, shard_id: int) -> ELLShard:
-        p = self.shard_path(shard_id)
-        self.io.read += p.stat().st_size
-        with np.load(p) as z:
-            meta = z["meta"]
-            cols = z["cols"]
-            unit = len(meta) > 3 and bool(meta[3])
-            vals = ((cols >= 0).astype(np.float32) if unit else z["vals"])
-            return ELLShard(
-                shard_id=shard_id,
-                start_vertex=int(meta[0]),
-                end_vertex=int(meta[1]),
-                nnz=int(meta[2]),
-                cols=cols,
-                vals=vals,
-                row_map=z["row_map"],
-            )
+        return unpack_shard_npz(shard_id, self.read_shard_bytes(shard_id))
 
     def read_shard_bytes(self, shard_id: int) -> bytes:
-        """Raw file bytes (used by the compressed cache, which stores blobs)."""
-        p = self.shard_path(shard_id)
-        data = p.read_bytes()
-        self.io.read += len(data)
+        """Canonical npz blob — here that is exactly the file's bytes."""
+        data = self.shard_path(shard_id).read_bytes()
+        self.io.add_read(len(data))
         return data
 
     def shard_nbytes(self, shard_id: int) -> int:
         return self.shard_path(shard_id).stat().st_size
 
-    def total_shard_bytes(self) -> int:
-        return sum(self.shard_nbytes(p) for p in range(self.num_shards))
-
     # ---- bloom filters ----------------------------------------------------
     def write_bloom(self, shard_id: int, bloom: BloomFilter) -> None:
         p = self.path / f"bloom_{shard_id:05d}.npz"
         np.savez(p, bits=bloom.bits, meta=np.array([bloom.num_bits, bloom.num_hashes]))
-        self.io.written += p.stat().st_size
+        self.io.add_written(p.stat().st_size)
 
     def read_bloom(self, shard_id: int) -> BloomFilter:
         p = self.path / f"bloom_{shard_id:05d}.npz"
-        self.io.read += p.stat().st_size
+        self.io.add_read(p.stat().st_size)
         with np.load(p) as z:
             meta = z["meta"]
             return BloomFilter(bits=z["bits"], num_bits=int(meta[0]), num_hashes=int(meta[1]))
-
-    def read_all_blooms(self) -> list[BloomFilter]:
-        return [self.read_bloom(p) for p in range(self.num_shards)]
 
 
 # ---- raw edge-list files (preprocessing input) -----------------------------
@@ -193,11 +153,11 @@ def iter_edge_list(path: str | os.PathLike, io: BytesCounter | None = None):
         p = path / name
         arr = np.load(p)
         if io is not None:
-            io.read += p.stat().st_size
+            io.add_read(p.stat().st_size)
         w = None
         if meta.get("weighted"):
             wp = path / name.replace("edges_", "weights_")
             w = np.load(wp)
             if io is not None:
-                io.read += wp.stat().st_size
+                io.add_read(wp.stat().st_size)
         yield arr[0], arr[1], w

@@ -16,6 +16,16 @@ per-shard Bloom filters, and a per-program cache of constructed engines
         cc = s.run("cc")
         print(s.stats.hit_ratio, s.stats.disk_bytes)
 
+Storage is pluggable through the ``ShardSource`` protocol —
+``backend="npz" | "packed" | "memory"`` selects the layer (packed = one
+mmap'd file, zero-copy shard views), and ``prefetch_depth=N`` (env
+``GRAPHMP_PREFETCH``) streams shards through a double-buffered background
+pipeline so disk reads, decompression and host->device staging overlap the
+SpMV:
+
+    with GraphSession(store_path, backend="packed", prefetch_depth=2) as s:
+        pr = s.run("pagerank", max_iters=30)
+
 Applications dispatch through the ``@register_app`` registry
 (core/apps.py) by name, or a ``VertexProgram`` can be passed directly.
 ``run_many`` batches several applications; ``iter_run`` yields an
@@ -35,11 +45,57 @@ from typing import Iterable, Iterator
 import jax.numpy as jnp
 import numpy as np
 
+from pathlib import Path
+
 from repro.core.apps import BatchedVertexProgram, VertexProgram, get_app
 from repro.core.cache import CompressedShardCache
 from repro.core.engine import (BatchRunResult, EngineConfig, IterationStats,
                                RunResult, VSWEngine)
+from repro.graph.source import ShardSource
 from repro.graph.storage import GraphStore
+
+BACKENDS = ("npz", "packed", "memory")
+
+
+def _resolve_source(store, backend: str | None):
+    """Turn (path, backend) into a ShardSource; pass storage objects through."""
+    from repro.graph.memory import MemoryGraphStore
+    from repro.graph.packed import (DEFAULT_PACKED_NAME, PackedGraphStore,
+                                    is_packed_file, pack_graph)
+
+    if not isinstance(store, (str, os.PathLike)):
+        if backend is not None:
+            raise TypeError(
+                "backend= only applies when a graph path is given; got a "
+                f"storage object ({type(store).__name__}) — pass its path, "
+                "or drop backend=")
+        return store
+    path = Path(store)
+    if backend is None:
+        backend = "packed" if is_packed_file(path) else "npz"
+    if backend == "npz":
+        store = GraphStore(path)
+        store.properties  # validate up front: clear MissingGraphError, not a
+        #                   raw ENOENT from vertex_info.npz deeper in __init__
+        return store
+    if backend == "packed":
+        if path.is_dir():
+            # auto-pack (and re-pack after a fresh preprocess): property.json
+            # is written last by preprocess_graph, so its mtime dates the store
+            packed = path / DEFAULT_PACKED_NAME
+            prop = path / "property.json"
+            if not packed.is_file() or (
+                    prop.is_file()
+                    and packed.stat().st_mtime_ns <= prop.stat().st_mtime_ns):
+                pack_graph(GraphStore(path), packed)
+            path = packed
+        return PackedGraphStore(path)
+    if backend == "memory":
+        inner = (PackedGraphStore(path) if is_packed_file(path)
+                 else GraphStore(path))
+        return MemoryGraphStore.from_source(inner)
+    raise ValueError(
+        f"unknown backend {backend!r}; expected one of {BACKENDS}")
 
 # run_batch accepts the single-source names and maps them onto the batched
 # program factories (which are also directly addressable by name).
@@ -59,11 +115,22 @@ class GraphSession:
     Parameters
     ----------
     store:
-        A ``GraphStore`` or a path to a preprocessed graph directory.
+        A path to a preprocessed graph (npz directory or packed ``.gmpk``
+        file), or any constructed ``ShardSource``.  Passing a constructed
+        ``GraphStore`` (the pre-backend ``GraphSession(store=...)`` style)
+        still works, but ``backend=`` then does not apply — prefer handing
+        the session a path and letting ``backend`` pick the storage layer.
+    backend:
+        Storage backend for a path: ``"npz"`` (directory of per-shard npz
+        files), ``"packed"`` (single mmap'd file with zero-copy shard views;
+        a directory path is auto-packed to ``packed.gmpk`` on first use), or
+        ``"memory"`` (whole graph RAM-resident — tests/benchmarks).  Default:
+        sniffed — ``"packed"`` for a packed file, else ``"npz"``.
     config:
         ``EngineConfig`` shared by every engine the session builds.  When
         omitted it comes from ``EngineConfig.from_env()``; extra keyword
-        arguments (``cache_budget_bytes=...``, ...) override single fields.
+        arguments (``cache_budget_bytes=...``, ``prefetch_depth=...``, ...)
+        override single fields.
     max_engines:
         LRU bound on cached engines.  Engines are keyed by (program,
         config) — for ``run_batch`` that includes the sources tuple — so a
@@ -71,11 +138,11 @@ class GraphSession:
         otherwise retain one jitted engine per set forever.
     """
 
-    def __init__(self, store: GraphStore | str | os.PathLike,
+    def __init__(self, store: ShardSource | str | os.PathLike,
                  config: EngineConfig | None = None, max_engines: int = 16,
-                 **overrides):
-        if not isinstance(store, GraphStore):
-            store = GraphStore(store)
+                 *, backend: str | None = None, **overrides):
+        self._owns_store = isinstance(store, (str, os.PathLike))
+        store = _resolve_source(store, backend)
         if config is None:
             config = EngineConfig.from_env(**overrides)
         elif overrides:
@@ -256,6 +323,14 @@ class GraphSession:
         """Drop engine and cache references (jit caches, cached blobs)."""
         self._engines.clear()
         self.cache.clear()
+        if self._owns_store:
+            try:
+                getattr(self.store, "close", lambda: None)()
+            except BufferError:
+                # jax aliases mmap'd shard segments zero-copy on CPU and
+                # releases them asynchronously; the mapping closes when the
+                # last consumer drops its buffer
+                pass
 
     def __enter__(self) -> "GraphSession":
         return self

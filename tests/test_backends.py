@@ -1,0 +1,227 @@
+"""ShardSource backends are interchangeable: identical results, identical
+disk-byte accounting.
+
+The property under test is the redesign's contract: prefetch_depth ∈
+{0, 1, 4} × backend ∈ {npz, packed, memory} × cache mode is invisible to
+``RunResult.values`` (bitwise) AND to the reported disk bytes — the pipeline
+fetches in schedule order through one worker, and every backend charges
+reads at the shard's canonical nbytes, so Table-3 accounting cannot drift
+with the storage layer or the overlap depth.
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.graph.memory import MemoryGraphStore
+from repro.graph.packed import PackedGraphStore, is_packed_file, pack_graph
+from repro.graph.source import MissingGraphError, ShardSource
+from repro.graph.storage import GraphStore
+from repro.session import GraphSession
+
+BACKENDS = ("npz", "packed", "memory")
+DEPTHS = (0, 1, 4)
+# modes 2-4 degrade to 1 where zstandard is absent; 0 and 2 cover the
+# no-cache and compressed paths on CI, no-cache and raw-cache locally
+MODES = (0, 2)
+APPS = {
+    "pagerank": dict(kwargs={}, max_iters=5),
+    "sssp": dict(kwargs={"source": 0}, max_iters=100),
+}
+
+
+@pytest.fixture(scope="module")
+def packed_store(graph_store):
+    return pack_graph(graph_store)  # writes <store>/packed.gmpk
+
+
+def _run(graph_store, backend, depth, mode, app):
+    spec = APPS[app]
+    sess = GraphSession(str(graph_store.path), backend=backend,
+                        cache_mode=mode, prefetch_depth=depth)
+    res = sess.run(app, max_iters=spec["max_iters"], **spec["kwargs"])
+    return res, sess
+
+
+@pytest.fixture(scope="module")
+def reference(graph_store, packed_store):
+    """(app, mode) -> (values, disk_bytes) on the npz backend, depth 0."""
+    out = {}
+    for app in APPS:
+        for mode in MODES:
+            res, sess = _run(graph_store, "npz", 0, mode, app)
+            out[(app, mode)] = (res.values, sess.stats.disk_bytes)
+    return out
+
+
+@pytest.mark.parametrize("app", sorted(APPS))
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_and_depth_invisible_to_results_and_accounting(
+        graph_store, packed_store, reference, backend, depth, mode, app):
+    if backend == "npz" and depth == 0:
+        pytest.skip("this combination IS the reference")
+    res, sess = _run(graph_store, backend, depth, mode, app)
+    ref_values, ref_disk = reference[(app, mode)]
+    np.testing.assert_array_equal(res.values, ref_values)
+    assert sess.stats.disk_bytes == ref_disk
+    assert sess.config.prefetch_depth == depth
+
+
+# ---------------------------------------------------------------------------
+# backend selection plumbing
+# ---------------------------------------------------------------------------
+def test_every_backend_satisfies_the_protocol(graph_store, packed_store):
+    sources = [GraphStore(graph_store.path), PackedGraphStore(packed_store),
+               MemoryGraphStore.from_source(graph_store)]
+    for s in sources:
+        assert isinstance(s, ShardSource)
+        assert s.num_shards == graph_store.num_shards
+        assert s.total_shard_bytes() == graph_store.total_shard_bytes()
+
+
+def test_packed_file_path_is_sniffed(graph_store, packed_store):
+    assert is_packed_file(packed_store)
+    sess = GraphSession(str(packed_store))
+    assert isinstance(sess.store, PackedGraphStore)
+
+
+def test_unknown_backend_rejected(graph_store):
+    with pytest.raises(ValueError, match="unknown backend"):
+        GraphSession(str(graph_store.path), backend="tape")
+
+
+def test_backend_kwarg_conflicts_with_store_object(graph_store):
+    with pytest.raises(TypeError, match="backend="):
+        GraphSession(graph_store, backend="npz")
+
+
+def test_store_object_shim_still_works(graph_store):
+    # the pre-backend GraphSession(store=GraphStore(...)) construction path
+    sess = GraphSession(store=graph_store)
+    assert sess.store is graph_store
+
+
+# ---------------------------------------------------------------------------
+# packed format round trip + zero-copy
+# ---------------------------------------------------------------------------
+def test_packed_round_trip(graph_store, packed_store):
+    packed = PackedGraphStore(packed_store)
+    assert packed.properties["num_edges"] == graph_store.num_edges
+    np.testing.assert_array_equal(packed.intervals, graph_store.intervals)
+    for a, b in zip(packed.read_vertex_info(), graph_store.read_vertex_info()):
+        np.testing.assert_array_equal(a, b)
+    for p in range(graph_store.num_shards):
+        got, want = packed.read_shard(p), graph_store.read_shard(p)
+        np.testing.assert_array_equal(got.cols, want.cols)
+        np.testing.assert_array_equal(got.vals, want.vals)
+        np.testing.assert_array_equal(got.row_map, want.row_map)
+        assert (got.start_vertex, got.end_vertex, got.nnz) == \
+               (want.start_vertex, want.end_vertex, want.nnz)
+        assert packed.shard_nbytes(p) == graph_store.shard_nbytes(p)
+        np.testing.assert_array_equal(packed.read_bloom(p).bits,
+                                      graph_store.read_bloom(p).bits)
+
+
+def test_packed_shards_are_zero_copy_views(packed_store):
+    packed = PackedGraphStore(packed_store)
+    shard = packed.read_shard(0)
+    for arr in (shard.cols, shard.vals, shard.row_map):
+        assert not arr.flags.owndata     # a view into the shared mmap...
+        assert not arr.flags.writeable   # ...and read-only
+
+
+def test_packed_rejects_non_packed_files(tmp_path, packed_store):
+    bogus = tmp_path / "bogus.gmpk"
+    bogus.write_bytes(b"not a packed graph at all")
+    with pytest.raises(MissingGraphError, match="bad magic"):
+        PackedGraphStore(bogus)
+    with pytest.raises(MissingGraphError, match="packed graph file"):
+        PackedGraphStore(tmp_path / "absent.gmpk")
+    # intact magic but amputated tail header -> still the clear error class
+    truncated = tmp_path / "truncated.gmpk"
+    truncated.write_bytes(packed_store.read_bytes()[:1024])
+    with pytest.raises(MissingGraphError, match="corrupt or truncated"):
+        PackedGraphStore(truncated)
+
+
+def test_session_close_releases_packed_mmap(graph_store, packed_store):
+    # an idle session closes its mmap deterministically: vertex info and
+    # blooms are copies, so nothing long-lived pins the mapping
+    idle = GraphSession(str(packed_store), cache_mode=0)
+    idle.close()
+    assert idle.store._mm.closed
+    # after a run, jax may still alias shard buffers zero-copy (the packed
+    # backend's whole point) — close() must stay silent, not raise BufferError
+    ran = GraphSession(str(packed_store), cache_mode=0)
+    ran.run("pagerank", max_iters=2)
+    ran.close()
+
+
+def test_pack_cli(graph_store, tmp_path):
+    out = tmp_path / "cli.gmpk"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.graph.pack", str(graph_store.path),
+         str(out)],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    assert "packed" in r.stdout and out.is_file()
+    assert PackedGraphStore(out).num_shards == graph_store.num_shards
+
+
+# ---------------------------------------------------------------------------
+# canonical blobs + memory backend
+# ---------------------------------------------------------------------------
+def test_read_shard_bytes_is_canonical_across_backends(graph_store, packed_store):
+    from repro.graph.source import unpack_shard_npz
+    packed = PackedGraphStore(packed_store)
+    mem = MemoryGraphStore.from_source(graph_store)
+    for p in range(graph_store.num_shards):
+        want = graph_store.read_shard(p)
+        for src in (graph_store, packed, mem):
+            got = unpack_shard_npz(p, src.read_shard_bytes(p))
+            np.testing.assert_array_equal(got.cols, want.cols)
+            np.testing.assert_array_equal(got.vals, want.vals)
+
+
+def test_memory_from_packed_owns_its_arrays(packed_store):
+    # RAM-resident means RAM-resident: shards loaded out of the packed
+    # backend must be copies, not views that keep the file mmap'd
+    mem = MemoryGraphStore.from_source(PackedGraphStore(packed_store))
+    shard = mem.read_shard(0)
+    for arr in (shard.cols, shard.vals, shard.row_map):
+        assert arr.flags.owndata and arr.flags.writeable
+
+
+def test_memory_backend_accounts_reads(graph_store):
+    mem = MemoryGraphStore.from_source(graph_store)
+    before = mem.io.read
+    mem.read_shard(0)
+    assert mem.io.read - before == mem.shard_nbytes(0) == \
+        graph_store.shard_nbytes(0)
+
+
+# ---------------------------------------------------------------------------
+# missing/partial graph directories fail with a clear error (not a raw ENOENT)
+# ---------------------------------------------------------------------------
+def test_missing_graph_dir_raises_clear_error(tmp_path):
+    with pytest.raises(MissingGraphError, match="preprocess_graph"):
+        GraphSession(str(tmp_path / "never_preprocessed"))
+
+
+def test_corrupt_property_json_raises_clear_error(tmp_path):
+    d = tmp_path / "halfwritten"
+    d.mkdir()
+    (d / "property.json").write_text("{ not json")
+    with pytest.raises(MissingGraphError, match="re-run"):
+        GraphStore(d).properties
+
+
+def test_incomplete_property_json_raises_clear_error(tmp_path):
+    d = tmp_path / "partial"
+    d.mkdir()
+    (d / "property.json").write_text('{"num_vertices": 4}')
+    with pytest.raises(MissingGraphError, match="num_shards"):
+        GraphStore(d).properties
