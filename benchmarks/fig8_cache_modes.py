@@ -19,8 +19,6 @@ def run() -> list[str]:
         res = sess.run("pagerank", max_iters=10)
         st = sess.stats
         cached_frac = sess.cache.cached_shards / store.num_shards
-        # actual_mode differs from the label when zstandard is missing and
-        # modes 2-4 degrade to raw caching — keep the rows honest
         out.append(row(
             f"fig8_cache_mode{mode}", res.total_seconds * 1e6,
             f"actual_mode={sess.cache.mode};"

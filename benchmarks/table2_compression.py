@@ -1,37 +1,32 @@
 """Paper Table 2: compression ratio + (de)compression throughput per core.
 
-The paper reports snappy / zlib-1 / zlib-3 on Twitter..EU-2015 shards; this
-container has zstd (mode mapping in core/cache.py), and the shard bytes come
-from the benchmark RMAT store.  The derived column reports ratio and MB/s —
-the numbers that justify cache modes 2-4 (decompress >> disk bandwidth)."""
+The paper reports snappy / zlib-1 / zlib-3 on Twitter..EU-2015 shards; we
+measure whatever codec the cache actually uses (zstd, or the paper's own
+zlib where zstandard is absent — core/cache.py), on shard bytes from the
+benchmark RMAT store.  The derived column reports ratio and MB/s — the
+numbers that justify cache modes 2-4 (decompress >> disk bandwidth)."""
 from __future__ import annotations
 
 import time
 
-try:
-    import zstandard
-except ImportError:  # mirror core/cache.py: degrade, don't crash the sweep
-    zstandard = None
-
 from benchmarks.common import get_store, row
+from repro.core.cache import _make_codec, zstandard
 
 
 def run() -> list[str]:
-    if zstandard is None:
-        return [row("table2_compression_skipped", 0.0,
-                    "zstandard not installed")]
+    codec_name = "zstd" if zstandard is not None else "zlib"
     store = get_store()
     blob = b"".join(store.read_shard_bytes(p)
                     for p in range(min(store.num_shards, 8)))
     out = []
-    for mode, level in (("mode2/zstd-1", 1), ("mode3/zstd-3", 3), ("mode4/zstd-9", 9)):
-        c = zstandard.ZstdCompressor(level=level)
+    for cache_mode in (2, 3, 4):
+        mode = f"mode{cache_mode}/{codec_name}"
+        compress, decompress = _make_codec(cache_mode)
         t0 = time.perf_counter()
-        comp = c.compress(blob)
+        comp = compress(blob)
         t_c = time.perf_counter() - t0
-        d = zstandard.ZstdDecompressor()
         t0 = time.perf_counter()
-        raw = d.decompress(comp)
+        raw = decompress(comp)
         t_d = time.perf_counter() - t0
         assert raw == blob
         ratio = len(blob) / len(comp)

@@ -31,6 +31,17 @@ def register_app(name_or_factory=None, *, name: str | None = None):
     Usable bare (``@register_app``, name taken from the function) or with an
     explicit name (``@register_app("pr")``/``@register_app(name="pr")``).
     Re-registering a name overwrites it (latest wins), so tests can shadow.
+
+    The factory's keyword arguments become the application's dispatch
+    arguments: after ::
+
+        @register_app("my_walk")
+        def my_walk(source: int = 0) -> VertexProgram: ...
+
+    ``GraphSession.run("my_walk", source=3)`` instantiates and runs it; it
+    also shows up in ``available_apps()`` and works with ``run_many``.
+    Factories returning a ``BatchedVertexProgram`` are dispatched the same
+    way through ``GraphSession.run_batch``.
     """
     if isinstance(name_or_factory, str):
         name = name_or_factory

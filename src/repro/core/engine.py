@@ -51,7 +51,7 @@ _VALID_CACHE_MODES = (0, 1, 2, 3, 4)
 
 def _env(name: str, default, cast):
     raw = os.environ.get(name)
-    if raw is None:
+    if raw is None or raw == "":  # unset/empty (CI matrix legs) -> default
         return default
     try:
         return cast(raw)
@@ -61,7 +61,7 @@ def _env(name: str, default, cast):
 
 
 def _cast_mode(raw: str):
-    return raw if raw == "auto" else int(raw)
+    return raw if raw in ("auto", "adaptive") else int(raw)
 
 
 def _cast_tristate(raw: str):
@@ -76,34 +76,71 @@ class EngineConfig:
     """Validated, immutable engine tuning (replaces the old kwarg soup).
 
     ``from_env()`` reads ``GRAPHMP_*`` environment overrides; ``replace()``
-    derives per-run variants without mutating the shared default.
+    derives per-run variants without mutating the shared default.  Fields
+    (env var in parentheses; see docs/REPRODUCING.md for the full table):
+
+    cache_mode (``GRAPHMP_CACHE_MODE``):
+        ``"auto"``/``"adaptive"`` — the two-tier adaptive edge cache
+        (default); an int 0-4 — the paper's static §2.4.2 modes (0 = no
+        cache, 1 = raw arrays, 2-4 = zstd levels 1/3/9).
+    cache_budget_bytes (``GRAPHMP_CACHE_BUDGET``, legacy alias
+    ``GRAPHMP_CACHE_BUDGET_BYTES``):
+        Strict host-byte budget for the edge cache, covering both tiers;
+        0 means "no application cache" (degrades to mode 0).
+    cache_hot_fraction (``GRAPHMP_CACHE_HOT_FRACTION``):
+        Adaptive cache only: fraction of the budget the hot (decompressed)
+        tier may occupy, in (0, 1].
+    cache_promote_after (``GRAPHMP_CACHE_PROMOTE_AFTER``):
+        Adaptive cache only: accesses (including the admitting miss) after
+        which a cold shard becomes a promotion candidate (>= 1).
+    selective_threshold (``GRAPHMP_SELECTIVE_THRESHOLD``):
+        Active-vertex ratio below which Bloom-filter selective scheduling
+        kicks in (paper: 0.001); negative disables it.
+    use_pallas (``GRAPHMP_USE_PALLAS``):
+        SpMV kernel backend: True/False, or ``"auto"`` to pick per platform.
+    preload (``GRAPHMP_PRELOAD``):
+        Pin every shard through the cache at engine construction.
+    prefetch_depth (``GRAPHMP_PREFETCH``):
+        Shards fetched ahead on a background thread (0 = synchronous,
+        1 = double buffering).
     """
 
-    cache_mode: int | str = "auto"          # 'auto' | 0..4 (paper §2.4.2)
-    cache_budget_bytes: int = 1 << 30       # host bytes for the edge cache
-    selective_threshold: float = 1e-3       # active ratio below which Bloom
-    #                                         scheduling kicks in; <0 disables
-    use_pallas: bool | str = "auto"         # SpMV kernel backend selection
-    preload: bool = False                   # pin every shard at construction
-    prefetch_depth: int = 0                 # shards fetched ahead on a
-    #                                         background thread (0 = fetch
-    #                                         synchronously, the legacy path;
-    #                                         1 = double buffering)
+    cache_mode: int | str = "auto"
+    cache_budget_bytes: int = 1 << 30
+    cache_hot_fraction: float = 0.5
+    cache_promote_after: int = 2
+    selective_threshold: float = 1e-3
+    use_pallas: bool | str = "auto"
+    preload: bool = False
+    prefetch_depth: int = 0
 
     def __post_init__(self):
         mode = self.cache_mode
-        if not (mode == "auto" or (isinstance(mode, int)
-                                   and not isinstance(mode, bool)
-                                   and mode in _VALID_CACHE_MODES)):
+        if not (mode in ("auto", "adaptive")
+                or (isinstance(mode, int)
+                    and not isinstance(mode, bool)
+                    and mode in _VALID_CACHE_MODES)):
             raise ValueError(
-                f"cache_mode must be 'auto' or one of {_VALID_CACHE_MODES}, "
-                f"got {mode!r}")
+                f"cache_mode must be 'auto', 'adaptive' or one of "
+                f"{_VALID_CACHE_MODES}, got {mode!r}")
         if not isinstance(self.cache_budget_bytes, int) \
                 or isinstance(self.cache_budget_bytes, bool) \
-                or self.cache_budget_bytes <= 0:
+                or self.cache_budget_bytes < 0:
             raise ValueError(
-                f"cache_budget_bytes must be a positive int, "
+                f"cache_budget_bytes must be an int >= 0 (0 = no cache), "
                 f"got {self.cache_budget_bytes!r}")
+        if not isinstance(self.cache_hot_fraction, (int, float)) \
+                or isinstance(self.cache_hot_fraction, bool) \
+                or not 0.0 < self.cache_hot_fraction <= 1.0:
+            raise ValueError(
+                f"cache_hot_fraction must be in (0, 1], "
+                f"got {self.cache_hot_fraction!r}")
+        if not isinstance(self.cache_promote_after, int) \
+                or isinstance(self.cache_promote_after, bool) \
+                or self.cache_promote_after < 1:
+            raise ValueError(
+                f"cache_promote_after must be an int >= 1, "
+                f"got {self.cache_promote_after!r}")
         if not np.isfinite(self.selective_threshold):
             raise ValueError(
                 f"selective_threshold must be finite, "
@@ -123,10 +160,16 @@ class EngineConfig:
     def from_env(cls, **overrides) -> "EngineConfig":
         """Defaults with GRAPHMP_* environment overrides applied underneath
         explicit keyword overrides."""
+        budget_default = _env("GRAPHMP_CACHE_BUDGET_BYTES",  # legacy alias
+                              cls.cache_budget_bytes, int)
         base = dict(
             cache_mode=_env("GRAPHMP_CACHE_MODE", cls.cache_mode, _cast_mode),
-            cache_budget_bytes=_env("GRAPHMP_CACHE_BUDGET_BYTES",
-                                    cls.cache_budget_bytes, int),
+            cache_budget_bytes=_env("GRAPHMP_CACHE_BUDGET",
+                                    budget_default, int),
+            cache_hot_fraction=_env("GRAPHMP_CACHE_HOT_FRACTION",
+                                    cls.cache_hot_fraction, float),
+            cache_promote_after=_env("GRAPHMP_CACHE_PROMOTE_AFTER",
+                                     cls.cache_promote_after, int),
             selective_threshold=_env("GRAPHMP_SELECTIVE_THRESHOLD",
                                      cls.selective_threshold, float),
             use_pallas=_env("GRAPHMP_USE_PALLAS", cls.use_pallas,
@@ -155,10 +198,22 @@ class IterationStats:
     edges_processed: int = 0    # sum of nnz over the shards actually run
     stall_seconds: float = 0.0  # time the compute loop waited on shard I/O
     fetch_seconds: float = 0.0  # fetch+stage time (overlapped when prefetching)
+    decode_seconds_saved: float = 0.0  # decompression cost hot-tier hits skipped
 
 
 @dataclasses.dataclass
 class RunResult:
+    """What one application run produced.
+
+    ``values`` holds one float per vertex (ranks for PageRank, distances
+    for SSSP/BFS, component ids for CC); ``iterations`` is how many sweeps
+    ran, ``converged`` whether the frontier emptied before ``max_iters``,
+    and ``history`` one ``IterationStats`` per iteration (per-iteration
+    seconds, active ratio, shards processed/skipped, disk bytes, cache hit
+    ratio, stall/fetch seconds).  ``total_seconds``/``edges_per_second``
+    aggregate it.
+    """
+
     values: np.ndarray
     iterations: int
     history: list[IterationStats]
@@ -278,7 +333,9 @@ class VSWEngine:
         self.batched = isinstance(program, BatchedVertexProgram)
         self.cache = cache if cache is not None else CompressedShardCache(
             store, mode=self.config.cache_mode,
-            budget_bytes=self.config.cache_budget_bytes)
+            budget_bytes=self.config.cache_budget_bytes,
+            hot_fraction=self.config.cache_hot_fraction,
+            promote_after=self.config.cache_promote_after)
         self.selective_threshold = self.config.selective_threshold
         self.use_pallas = self.config.use_pallas
         self.preload = self.config.preload
@@ -305,9 +362,9 @@ class VSWEngine:
                 self._preloaded[p] = self.cache.get(p)
         # ALL shard consumption goes through the pipeline — depth 0 is the
         # synchronous path, depth >= 1 prefetches + stages on a worker thread
-        self._pipeline = ShardPipeline(self._get_shard,
-                                       depth=self.config.prefetch_depth,
-                                       stage=self._stage)
+        self._pipeline = ShardPipeline(
+            self._get_shard, depth=self.config.prefetch_depth,
+            stage=self._stage, nbytes=ELLShard.decoded_nbytes)
         self.last_result: RunResult | None = None
 
     @classmethod
@@ -459,6 +516,7 @@ class VSWEngine:
             t0 = time.time()
             disk0 = self.cache.stats.disk_bytes
             hits0, misses0 = self.cache.stats.hits, self.cache.stats.misses
+            saved0 = self.cache.stats.decode_seconds_saved
             stall0 = self._pipeline.stats.stall_seconds
             fetch0 = self._pipeline.stats.fetch_seconds
             schedule, selective = self._schedule(active_ids, active_ratio)
@@ -501,6 +559,8 @@ class VSWEngine:
                 edges_processed=sum(self._shard_nnz[p] for p in schedule),
                 stall_seconds=self._pipeline.stats.stall_seconds - stall0,
                 fetch_seconds=self._pipeline.stats.fetch_seconds - fetch0,
+                decode_seconds_saved=(
+                    self.cache.stats.decode_seconds_saved - saved0),
             )
             history.append(stats)
             if checkpoint_dir and checkpoint_every and (it + 1) % checkpoint_every == 0:

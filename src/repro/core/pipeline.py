@@ -21,6 +21,18 @@ identical at every depth.
 the consumer spent blocked waiting on the queue (what prefetch is supposed
 to drive to zero) and ``fetch_seconds`` is background time spent producing
 shards (what it hides).
+
+Memory interplay with the two-tier cache (core/cache.py): the worker's
+``fetch`` is ``cache.get``, which may promote/demote/evict — every such
+transition and its byte accounting happens inside the cache's lock, so
+staging never races a promotion and the cache budget holds at every depth.
+The pipeline itself holds up to ``depth`` staged shards in flight on top of
+the cache; that host memory is charged to ``stats.staged_bytes`` (current)
+and ``stats.staged_peak_bytes`` (high-water), bounded by
+``depth × max shard bytes``.  It is deliberately NOT charged against the
+cache budget: doing so would make eviction sequences — and therefore the
+Table-3 disk-byte accounting — depend on prefetch depth, breaking the
+bit-for-bit invariance contract above.
 """
 from __future__ import annotations
 
@@ -37,11 +49,19 @@ _DONE = object()
 
 @dataclasses.dataclass
 class PipelineStats:
-    """Producer/consumer accounting; all fields are lifetime accumulators."""
+    """Producer/consumer accounting.
+
+    ``shards``/``stall_seconds``/``fetch_seconds`` are lifetime
+    accumulators; ``staged_bytes`` is the host bytes of shards currently
+    staged but not yet consumed (bounded by depth × max shard bytes) and
+    ``staged_peak_bytes`` its lifetime high-water mark.
+    """
 
     shards: int = 0           # shards delivered to the consumer
     stall_seconds: float = 0.0  # consumer time blocked on the queue
     fetch_seconds: float = 0.0  # producer time fetching + staging
+    staged_bytes: int = 0       # staged-but-unconsumed host bytes (in flight)
+    staged_peak_bytes: int = 0  # lifetime high-water mark of staged_bytes
 
 
 @dataclasses.dataclass
@@ -53,27 +73,42 @@ class ShardPipeline:
     """Streams ``(shard_id, shard, staged)`` for a schedule, ``depth`` ahead.
 
     ``fetch``: shard_id -> ELLShard (typically ``cache.get``; must be safe to
-    call from one background thread — the CompressedShardCache is locked).
+    call from one background thread — the CompressedShardCache does every
+    tier transition, including promotions, under its own lock).
     ``stage``: optional ELLShard -> anything; runs on the worker too, so
     host->device transfers land off the critical path.  With ``depth == 0``
     both run inline on the consumer thread (the synchronous path).
+    ``nbytes``: optional ELLShard -> int used to charge staged-but-unconsumed
+    shards to ``stats.staged_bytes`` (the pipeline's own memory footprint on
+    top of the cache budget).
     """
 
     def __init__(self, fetch: Callable[[int], ELLShard], depth: int = 0,
-                 stage: Callable[[ELLShard], Any] | None = None):
+                 stage: Callable[[ELLShard], Any] | None = None,
+                 nbytes: Callable[[ELLShard], int] | None = None):
         if depth < 0:
             raise ValueError(f"prefetch depth must be >= 0, got {depth}")
         self.fetch = fetch
         self.stage = stage
+        self.nbytes = nbytes
         self.depth = int(depth)
         self.stats = PipelineStats()
+        self._stats_lock = threading.Lock()  # producer + consumer both charge
 
-    def _produce(self, p: int) -> tuple[int, ELLShard, Any]:
+    def _charge(self, n: int) -> None:
+        with self._stats_lock:
+            self.stats.staged_bytes += n
+            self.stats.staged_peak_bytes = max(self.stats.staged_peak_bytes,
+                                               self.stats.staged_bytes)
+
+    def _produce(self, p: int) -> tuple[int, ELLShard, Any, int]:
         t0 = time.perf_counter()
         shard = self.fetch(p)
         staged = self.stage(shard) if self.stage is not None else None
+        held = self.nbytes(shard) if self.nbytes is not None else 0
+        self._charge(held)
         self.stats.fetch_seconds += time.perf_counter() - t0
-        return p, shard, staged
+        return p, shard, staged, held
 
     def stream(self, schedule: Sequence[int]) -> Iterator[tuple[int, ELLShard, Any]]:
         """Yield every shard of ``schedule`` in order, prefetching ahead."""
@@ -82,11 +117,12 @@ class ShardPipeline:
         if self.depth == 0 or len(schedule) < 2:
             for p in schedule:
                 t0 = time.perf_counter()
-                item = self._produce(p)
+                pid, shard, staged, held = self._produce(p)
                 # synchronous path: the consumer IS stalled for the whole fetch
                 self.stats.stall_seconds += time.perf_counter() - t0
                 self.stats.shards += 1
-                yield item
+                self._charge(-held)  # delivered: no longer in flight
+                yield pid, shard, staged
             return
 
         q: queue.Queue = queue.Queue(maxsize=self.depth)
@@ -113,14 +149,28 @@ class ShardPipeline:
                     return
                 if isinstance(item, _Failure):
                     raise item.exc
+                pid, shard, staged, held = item
                 self.stats.shards += 1
-                yield item
+                self._charge(-held)  # delivered: no longer in flight
+                yield pid, shard, staged
         finally:
             cancel.set()
-            # unblock a worker parked on q.put, then reap it
+            # unblock a worker parked on q.put, then reap it; de-charge
+            # drained items so staged_bytes never counts abandoned shards
             while t.is_alive():
                 try:
-                    q.get_nowait()
+                    item = q.get_nowait()
+                    if isinstance(item, tuple):
+                        self._charge(-item[3])
                 except queue.Empty:
                     pass
                 t.join(timeout=0.05)
+            # the worker may have completed one last q.put between the drain
+            # and its cancel check — sweep whatever is still queued
+            while True:
+                try:
+                    item = q.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, tuple):
+                    self._charge(-item[3])

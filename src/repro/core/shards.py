@@ -141,6 +141,12 @@ class ELLShard:
     def padded_bytes(self) -> int:
         return self.cols.nbytes + self.vals.nbytes
 
+    def decoded_nbytes(self) -> int:
+        """Host bytes of the decoded shard (cols + vals + row_map) — the one
+        definition shared by cache hot-tier accounting and pipeline
+        staged-bytes accounting."""
+        return self.padded_bytes() + self.row_map.nbytes
+
     def source_vertices(self) -> np.ndarray:
         c = self.cols[self.cols >= 0]
         return np.unique(c)

@@ -15,6 +15,13 @@ per-shard Bloom filters, and a per-program cache of constructed engines
         d  = s.run("sssp", source=0)          # warm cache: ~no disk reads
         cc = s.run("cc")
         print(s.stats.hit_ratio, s.stats.disk_bytes)
+        print(s.cache_report())               # tier occupancy, promotions,
+        #                                       decode seconds saved, ...
+
+The shared cache is the two-tier adaptive edge cache of core/cache.py
+(hot decompressed tier + cold compressed tier under one strict budget —
+``cache_budget_bytes`` / env ``GRAPHMP_CACHE_BUDGET``); pass
+``cache_mode=0..4`` for the paper's static modes.
 
 Storage is pluggable through the ``ShardSource`` protocol —
 ``backend="npz" | "packed" | "memory"`` selects the layer (packed = one
@@ -151,7 +158,9 @@ class GraphSession:
         self.config = config
         self.cache = CompressedShardCache(
             store, mode=config.cache_mode,
-            budget_bytes=config.cache_budget_bytes)
+            budget_bytes=config.cache_budget_bytes,
+            hot_fraction=config.cache_hot_fraction,
+            promote_after=config.cache_promote_after)
         # shared vertex metadata: read from disk exactly once per session
         self.in_deg, self.out_deg = store.read_vertex_info()
         self.blooms = store.read_all_blooms()
@@ -207,10 +216,32 @@ class GraphSession:
             **app_kwargs) -> RunResult:
         """Run one application to ``max_iters`` or convergence.
 
-        ``app`` is a registered name (extra kwargs go to its factory, e.g.
-        ``run("sssp", source=3)``) or a ``VertexProgram``.  ``config``
-        overrides the session config for this application's engine (the
-        compressed cache stays shared either way).
+        Parameters
+        ----------
+        app:
+            A registered application name (see
+            ``repro.core.apps.available_apps()``; extra keyword arguments go
+            to its factory, e.g. ``run("sssp", source=3)`` or
+            ``run("pagerank", damping=0.9)``) or a constructed
+            ``VertexProgram``.
+        max_iters:
+            Iteration cap; the run also stops early when no vertex value
+            changes (``RunResult.converged``).
+        checkpoint_dir / checkpoint_every / resume:
+            Fault tolerance: snapshot (values, frontier, iteration) into
+            ``checkpoint_dir`` every ``checkpoint_every`` iterations;
+            ``resume=True`` restarts from the latest snapshot (and refuses a
+            checkpoint written by a different program or source set).
+        config:
+            ``EngineConfig`` overriding the session config for this
+            application's engine (the compressed edge cache stays shared
+            either way).
+
+        Returns
+        -------
+        RunResult with ``values`` (one float per vertex), ``iterations``,
+        ``converged``, and ``history`` (one ``IterationStats`` per
+        iteration — disk bytes, cache hit ratio, stall/fetch seconds).
         """
         eng = self.engine(app, config, **app_kwargs)
         return eng.run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
@@ -220,11 +251,20 @@ class GraphSession:
                  checkpoint_dir: str | None = None, checkpoint_every: int = 0,
                  resume: bool = False, config: EngineConfig | None = None,
                  **app_kwargs) -> Iterator[IterationStats]:
-        """Streaming form of ``run``: yields IterationStats per iteration.
+        """Streaming form of ``run``: yields an ``IterationStats`` after
+        every iteration, for live monitoring of long runs.
 
-        The finished RunResult is the generator's return value
-        (``StopIteration.value``) and is also available afterwards as
-        ``session.engine(app, ...).last_result``.
+        Takes exactly the arguments of ``run``.  The finished ``RunResult``
+        is the generator's return value (``StopIteration.value``) and is
+        also available afterwards as ``session.engine(app, ...).last_result``:
+
+            gen = session.iter_run("pagerank", max_iters=100)
+            while True:
+                try:
+                    print(next(gen).active_ratio)
+                except StopIteration as stop:
+                    result = stop.value
+                    break
         """
         eng = self.engine(app, config, **app_kwargs)
         return eng.iter_run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
@@ -237,18 +277,31 @@ class GraphSession:
                   **app_kwargs) -> list[RunResult]:
         """K single-source queries through ONE sweep of the edge shards.
 
-        ``sources`` gives one frontier per column; ``app`` is a single-source
-        name ("sssp"/"bfs"/"pagerank"), a batched factory name
-        ("sssp_multi"/"bfs_multi"/"personalized_pagerank"), or a
-        ``BatchedVertexProgram``.  Each iteration pays disk + decompression
-        for a shard once and advances every column against it, so K landmark
-        queries cost close to one query's I/O instead of K (paper §2.2's
-        amortization, applied across *queries*).
+        Each iteration pays disk + decompression for a shard once and
+        advances every column against it, so K landmark queries cost close
+        to one query's I/O instead of K (paper §2.2's amortization, applied
+        across *queries*).
 
-        Returns one ``RunResult`` per source, in order, with honest
-        per-column iteration counts (a column is only billed for sweeps it
-        entered with a live frontier).  The combined ``BatchRunResult``
-        ([n, K] values, shared history) stays available as
+        Parameters
+        ----------
+        app:
+            A single-source name (``"sssp"``/``"bfs"``/``"pagerank"`` — the
+            latter becomes personalized PageRank over the given seeds), a
+            batched factory name (``"sssp_multi"``/``"bfs_multi"``/
+            ``"personalized_pagerank"``), or a ``BatchedVertexProgram``.
+        sources:
+            One frontier vertex per column (for PPR these are the ``seeds``;
+            either spelling works).  Required when dispatching by name.
+        max_iters / checkpoint_dir / checkpoint_every / resume / config:
+            As in ``run``; checkpoints hold the full [n, K] state, so a
+            resumed batch continues every column.
+
+        Returns
+        -------
+        One ``RunResult`` per source, in order, with honest per-column
+        iteration counts (a column is only billed for sweeps it entered
+        with a live frontier).  The combined ``BatchRunResult`` ([n, K]
+        values, shared history) stays available as
         ``session.last_batch_result`` until the next ``run_batch`` call.
         """
         if isinstance(app, BatchedVertexProgram):
@@ -311,6 +364,15 @@ class GraphSession:
     def stats(self):
         """Shared CompressedShardCache stats (hits, disk_bytes, ...)."""
         return self.cache.stats
+
+    def cache_report(self) -> dict:
+        """Snapshot of the shared edge cache: policy ("adaptive"/"static"),
+        mode, budget, per-tier occupancy (``hot_bytes``/``hot_shards``,
+        ``cold_bytes``/``cold_shards``), hit/miss/promotion/demotion/eviction
+        counters, ``decode_seconds_saved`` (decompression cost hot-tier hits
+        skipped) and the achieved compression ratio.  All values are
+        self-consistent (taken under the cache lock)."""
+        return self.cache.report()
 
     def warm(self) -> int:
         """Pull every shard through the cache once (prefetch); returns the

@@ -22,8 +22,8 @@ from repro.session import GraphSession
 
 BACKENDS = ("npz", "packed", "memory")
 DEPTHS = (0, 1, 4)
-# modes 2-4 degrade to 1 where zstandard is absent; 0 and 2 cover the
-# no-cache and compressed paths on CI, no-cache and raw-cache locally
+# 0 and 2 cover the no-cache and compressed static paths (mode 2 uses zstd
+# on CI, stdlib zlib where zstandard is absent — both deterministic)
 MODES = (0, 2)
 APPS = {
     "pagerank": dict(kwargs={}, max_iters=5),
@@ -68,6 +68,62 @@ def test_backend_and_depth_invisible_to_results_and_accounting(
     np.testing.assert_array_equal(res.values, ref_values)
     assert sess.stats.disk_bytes == ref_disk
     assert sess.config.prefetch_depth == depth
+
+
+# ---------------------------------------------------------------------------
+# the same contract for every TIER configuration of the adaptive cache:
+# budget ∈ {tiny, one_shard, ample} × depth ∈ {0, 2} × backend — results
+# bitwise-identical to the static cache, disk-byte accounting invariant to
+# backend and prefetch depth, and the budget never exceeded
+# ---------------------------------------------------------------------------
+TIER_BUDGETS = ("tiny", "one_shard", "ample")
+
+
+def _tier_budget(store, kind: str) -> int:
+    largest = max(store.shard_nbytes(p) for p in range(store.num_shards))
+    if kind == "tiny":
+        return max(largest // 2, 1 << 10)  # below the largest single shard
+    if kind == "one_shard":
+        return largest
+    return 4 * store.total_shard_bytes()   # ample: everything can go hot
+
+
+def _run_adaptive(graph_store, backend, depth, budget):
+    sess = GraphSession(str(graph_store.path), backend=backend,
+                        cache_mode="adaptive", cache_budget_bytes=budget,
+                        prefetch_depth=depth)
+    res = sess.run("pagerank", max_iters=5)
+    return res, sess
+
+
+@pytest.fixture(scope="module")
+def adaptive_reference(graph_store, packed_store):
+    """budget kind -> disk_bytes of the npz depth-0 adaptive run."""
+    out = {}
+    for kind in TIER_BUDGETS:
+        _, sess = _run_adaptive(graph_store, "npz", 0,
+                                _tier_budget(graph_store, kind))
+        out[kind] = sess.stats.disk_bytes
+    return out
+
+
+@pytest.mark.parametrize("budget_kind", TIER_BUDGETS)
+@pytest.mark.parametrize("depth", (0, 2))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_adaptive_tiers_invisible_to_results_and_accounting(
+        graph_store, packed_store, reference, adaptive_reference,
+        backend, depth, budget_kind):
+    budget = _tier_budget(graph_store, budget_kind)
+    res, sess = _run_adaptive(graph_store, backend, depth, budget)
+    # bitwise-identical to the static cache (mode-0 reference values)
+    np.testing.assert_array_equal(res.values, reference[("pagerank", 0)][0])
+    # disk-byte accounting invariant to backend and overlap depth
+    assert sess.stats.disk_bytes == adaptive_reference[budget_kind]
+    # the strict budget held (and the tier split stayed consistent)
+    assert sess.cache.audit() <= budget
+    if budget_kind == "ample":
+        # ample budget: static economics — exactly one miss per shard
+        assert sess.stats.misses == graph_store.num_shards
 
 
 # ---------------------------------------------------------------------------

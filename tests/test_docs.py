@@ -1,0 +1,27 @@
+"""Documentation stays navigable: every relative markdown link resolves.
+
+Runs the same checker CI runs (tools/check_links.py) over README.md and
+docs/, so a moved file or a renamed heading fails tier-1 locally, not just
+on the push.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_markdown_links_resolve():
+    r = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_links.py"),
+         str(REPO / "README.md"), str(REPO / "docs")],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr or r.stdout
+    assert "OK" in r.stdout
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    readme = (REPO / "README.md").read_text()
+    for doc in ("docs/ARCHITECTURE.md", "docs/REPRODUCING.md"):
+        assert (REPO / doc).is_file()
+        assert doc in readme, f"README does not link {doc}"

@@ -84,13 +84,17 @@ def test_consumer_early_exit_reaps_worker():
         fetched.append(p)
         return _fake_shard(p)
 
-    pipe = ShardPipeline(fetch, depth=1)
+    pipe = ShardPipeline(fetch, depth=1,
+                         nbytes=lambda s: s.decoded_nbytes())
     for p, _, _ in pipe.stream(list(range(100))):
         if p == 3:
             break
     # worker stopped promptly: it ran at most a couple past the break point
     assert len(fetched) <= 8
     assert threading.active_count() < 20  # no leaked prefetch threads
+    # abandoned queued shards were de-charged: nothing is in flight anymore
+    assert pipe.stats.staged_bytes == 0
+    assert pipe.stats.staged_peak_bytes > 0
 
 
 def test_negative_depth_rejected():
@@ -123,7 +127,7 @@ def test_engine_reports_stall_and_fetch_seconds(graph_store):
 # ---------------------------------------------------------------------------
 # thread-safety regression: 8 threads hammer cache.get
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("mode", [0, 1, 2])
+@pytest.mark.parametrize("mode", [0, 1, 2, "adaptive"])
 def test_cache_get_is_thread_safe(graph_store, mode):
     from repro.graph.storage import GraphStore
     store = GraphStore(graph_store.path)  # private io counters
@@ -156,6 +160,7 @@ def test_cache_get_is_thread_safe(graph_store, mode):
         assert cache.stats.disk_bytes == store.io.read
     else:
         # big budget, no evictions: exactly one miss per distinct shard
+        # (adaptive promotions/demotions must not re-read or re-charge)
         assert cache.stats.evictions == 0
         assert cache.stats.misses == P
         assert cache.stats.disk_bytes == sum(

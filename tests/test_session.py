@@ -131,9 +131,11 @@ def test_factory_kwargs_dispatch(graph_store):
     dict(cache_mode=-1),
     dict(cache_mode="fast"),
     dict(cache_mode=True),
-    dict(cache_budget_bytes=0),
     dict(cache_budget_bytes=-4096),
     dict(cache_budget_bytes=1.5),
+    dict(cache_hot_fraction=0.0),
+    dict(cache_hot_fraction=1.5),
+    dict(cache_promote_after=0),
     dict(selective_threshold=float("nan")),
     dict(use_pallas="maybe"),
 ])
@@ -142,12 +144,24 @@ def test_engine_config_rejects_bad_values(bad):
         EngineConfig(**bad)
 
 
+def test_engine_config_budget_zero_means_no_cache(graph_store):
+    """budget=0 is valid and degrades to mode 0 (no application cache)."""
+    sess = GraphSession(graph_store, cache_budget_bytes=0)
+    assert sess.cache.mode == 0 and not sess.cache.adaptive
+    sess.run("pagerank", max_iters=2)
+    assert sess.cache.cached_shards == 0
+    assert sess.stats.hits == 0
+
+
 def test_engine_config_replace_and_env(monkeypatch):
     cfg = EngineConfig()
     assert cfg.replace(cache_mode=2).cache_mode == 2
     assert cfg.cache_mode == "auto"  # frozen: replace does not mutate
     monkeypatch.setenv("GRAPHMP_CACHE_MODE", "3")
     monkeypatch.setenv("GRAPHMP_CACHE_BUDGET_BYTES", str(1 << 20))
+    # the primary name would shadow the legacy alias under test (e.g. on the
+    # CI tight-budget leg, which exports GRAPHMP_CACHE_BUDGET suite-wide)
+    monkeypatch.delenv("GRAPHMP_CACHE_BUDGET", raising=False)
     env_cfg = EngineConfig.from_env()
     assert env_cfg.cache_mode == 3
     assert env_cfg.cache_budget_bytes == 1 << 20

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Markdown link checker for README + docs/ (no network, no dependencies).
+
+Checks every ``[text](target)`` in the given markdown files/directories:
+
+  * relative file targets must exist (relative to the file containing the
+    link), including the file part of ``path#anchor`` targets;
+  * ``#anchor`` / ``path#anchor`` targets must match a heading in the
+    target file (GitHub-style slugs);
+  * ``http(s)://`` targets are reported but not fetched (offline CI).
+
+Exit status 1 if any link is broken.  Usage::
+
+    python tools/check_links.py README.md docs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces to dashes."""
+    text = re.sub(r"[`*_\[\]()]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return re.sub(r" ", "-", text)
+
+
+def anchors_of(md_path: Path) -> set[str]:
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    return {github_slug(h) for h in HEADING_RE.findall(text)}
+
+
+def iter_md_files(args: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+        else:
+            raise SystemExit(f"not a markdown file or directory: {a}")
+    return files
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue  # offline: existence not checkable, format accepted
+        path_part, _, anchor = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"{md}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = iter_md_files(argv or ["README.md", "docs"])
+    errors: list[str] = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
