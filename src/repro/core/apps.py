@@ -88,6 +88,19 @@ class VertexProgram:
     # frontier vertex ids this program was built for (() if source-free);
     # checkpoints record them so resume can reject a different run's state
     sources: tuple = ()
+    # batch-compatibility token: two programs with EQUAL jit_signature are
+    # guaranteed to have identical device callables (gather_transform / post /
+    # changed and semiring), differing only in host-side init/sources.  The
+    # engine cache keys on it, so e.g. sssp(source=5) and sssp(source=7)
+    # share one engine and its jitted shard steps instead of recompiling per
+    # source — the property the serving layer's dynamic batching relies on.
+    # None => no sharing claim (engines keyed by program identity/name).
+    # CONTRACT for dataclasses.replace(): the signature is inherited, so
+    # overriding any device callable (gather_transform/post/changed) MUST
+    # also replace jit_signature (or set it to None) — keeping the old one
+    # silently serves the old compiled functions.  Renaming alone is fine
+    # (bfs = sssp renamed shares sssp's engine deliberately).
+    jit_signature: tuple | None = None
 
 
 @register_app
@@ -114,6 +127,7 @@ def pagerank(damping: float = 0.85, tol: float = 1e-6) -> VertexProgram:
         post=post,
         changed=lambda new, old: jnp.abs(new - old) > tol * jnp.abs(old) + 1e-30,
         needs_all_edges=True,
+        jit_signature=("pagerank", float(damping), float(tol)),
     )
 
 
@@ -138,6 +152,8 @@ def sssp(source: int = 0) -> VertexProgram:
         post=lambda partial, old, n: jnp.minimum(partial, old),
         changed=lambda new, old: new < old,
         sources=(source,),
+        # source only affects init: every SSSP/BFS query shares one engine
+        jit_signature=("sssp",),
     )
 
 
@@ -162,6 +178,7 @@ def cc() -> VertexProgram:
         gather_transform=lambda values, out_deg: values,
         post=lambda partial, old, n: jnp.minimum(partial, old),
         changed=lambda new, old: new < old,
+        jit_signature=("cc",),
     )
 
 
@@ -175,8 +192,14 @@ class BatchedVertexProgram:
 
     Values are [n, K] matrices; column k is exactly the single-source program
     for source k.  ``post`` additionally receives the *global* destination
-    row ids of its slice so per-column reset vectors (personalized PageRank's
-    seed one-hot) can be evaluated without materializing [n, K] constants.
+    row ids of its slice, plus a slice of the optional ``make_aux`` matrix.
+
+    ``make_aux`` carries per-column CONSTANTS (personalized PageRank's
+    scaled seed one-hot) into the jitted shard step as a runtime [n, K]
+    array rather than a baked-in closure constant: the compiled step is
+    then identical across source/seed sets, so ``jit_signature`` need not
+    include them and a serving workload streaming distinct seed sets at the
+    same K reuses ONE compiled engine instead of recompiling per request.
     """
 
     name: str
@@ -187,13 +210,22 @@ class BatchedVertexProgram:
     init: Callable[[int, np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray]]
     # (values [n_pad, K], out_deg [n_pad]) -> x pulled along in-edges
     gather_transform: Callable[[Array, Array], Array]
-    # (partial [R, K], old [R, K], rows [R] global ids, num_vertices) -> new
-    post: Callable[[Array, Array, Array, int], Array]
+    # (partial [R, K], old [R, K], rows [R] global ids, num_vertices,
+    #  aux [R, K] slice of make_aux(n) or None) -> new
+    post: Callable[[Array, Array, Array, int, Array | None], Array]
     # (new [n, K], old [n, K]) -> bool mask of updated (vertex, column) pairs
     changed: Callable[[Array, Array], Array]
     # the K frontier vertex ids, column order; checkpoints record them so
     # resume rejects state from a different landmark/seed set
     sources: tuple = ()
+    # batch-compatibility token — see VertexProgram.jit_signature.  Batched
+    # signatures include K (the jitted [n, K] shard step specializes on it)
+    # but usually NOT the sources, so a serving layer answering a stream of
+    # distinct landmark sets at the same K reuses one compiled engine.
+    jit_signature: tuple | None = None
+    # optional n -> [n, K] float32 constants delivered to post as a runtime
+    # argument (sliced per shard); None => post receives aux=None
+    make_aux: Callable[[int], np.ndarray] | None = None
 
 
 def _check_sources(sources) -> tuple[int, ...]:
@@ -228,9 +260,11 @@ def sssp_multi(sources=(0,)) -> BatchedVertexProgram:
         columns=K,
         init=init,
         gather_transform=lambda values, out_deg: values,
-        post=lambda partial, old, rows, n: jnp.minimum(partial, old),
+        post=lambda partial, old, rows, n, aux: jnp.minimum(partial, old),
         changed=lambda new, old: new < old,
         sources=sources,
+        # only K shapes the jitted [n, K] step — landmark sets share engines
+        jit_signature=("sssp_multi", K),
     )
 
 
@@ -246,8 +280,10 @@ def personalized_pagerank(seeds=(0,), damping: float = 0.85,
                           tol: float = 1e-6) -> BatchedVertexProgram:
     """K personalized-PageRank columns: pr_k = (1-d)·e_seed_k + d·Aᵀpr_k.
 
-    The reset vector differs per column, which is why batched ``post`` sees
-    the global row ids: the seed one-hot is computed on the [R, K] slice.
+    The reset vector differs per column; it rides into the jitted shard
+    step as the ``make_aux`` runtime constant (the [n, K] scaled seed
+    one-hot), NOT as a closure constant — so every seed set of the same K
+    shares one compiled engine (see ``BatchedVertexProgram.make_aux``).
     Same relative-tol convergence rule as the global ``pagerank``.
     """
     seeds = _check_sources(seeds)
@@ -262,9 +298,10 @@ def personalized_pagerank(seeds=(0,), damping: float = 0.85,
     def gather(values, out_deg):
         return values / jnp.maximum(out_deg, 1).astype(values.dtype)[:, None]
 
-    def post(partial, old, rows, n):
-        reset = (rows[:, None] == jnp.asarray(seeds_np)[None, :])
-        return jnp.where(reset, 1.0 - damping, 0.0) + damping * partial
+    def make_aux(n):
+        reset = np.zeros((n, K), dtype=np.float32)
+        reset[seeds_np, np.arange(K)] = 1.0 - damping
+        return reset
 
     return BatchedVertexProgram(
         name="personalized_pagerank",
@@ -273,10 +310,60 @@ def personalized_pagerank(seeds=(0,), damping: float = 0.85,
         columns=K,
         init=init,
         gather_transform=gather,
-        post=post,
+        post=lambda partial, old, rows, n, aux: aux + damping * partial,
         changed=lambda new, old: jnp.abs(new - old) > tol * jnp.abs(old) + 1e-30,
         sources=seeds,
+        jit_signature=("personalized_pagerank", K, float(damping), float(tol)),
+        make_aux=make_aux,
     )
+
+
+# ---------------------------------------------------------------------------
+# Batch-compatibility metadata: which single-query apps coalesce, and how
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    """How K independent single-source queries of one app become one
+    ``run_batch`` call.  The serving layer (repro/serve/graph_service.py)
+    coalesces pending requests whose ``BatchSpec`` AND non-source parameters
+    agree into one [n, K] micro-batch; ``family`` names the compatibility
+    class (same batched factory + same semiring => same sweep can serve
+    them)."""
+
+    family: str        # compatibility class, e.g. "min_plus/sssp_multi"
+    batched_app: str   # registered factory answering K queries at once
+    source_param: str  # the single-query frontier kwarg ("source" / "seed")
+    batch_param: str   # the batched factory's K-tuple kwarg ("sources"/"seeds")
+    semiring: str      # shared semiring (informational; part of the family)
+    exact: bool = True  # column k bitwise-equals the solo run (min-propagation
+    #                     semirings; False for float-accumulating ones)
+
+
+_BATCH_SPECS: dict[str, BatchSpec] = {}
+
+
+def register_batchable(name: str, spec: BatchSpec) -> None:
+    """Declare that single-query app ``name`` coalesces per ``spec``."""
+    _BATCH_SPECS[name] = spec
+
+
+def batch_spec(name: str) -> BatchSpec | None:
+    """The BatchSpec for a single-query app name (None = not batchable)."""
+    return _BATCH_SPECS.get(name)
+
+
+register_batchable("sssp", BatchSpec(
+    family="min_plus/sssp_multi", batched_app="sssp_multi",
+    source_param="source", batch_param="sources", semiring="min_plus"))
+register_batchable("bfs", BatchSpec(
+    family="min_plus/bfs_multi", batched_app="bfs_multi",
+    source_param="source", batch_param="sources", semiring="min_plus"))
+# "ppr" has no solo VertexProgram (the seed reset needs the batched post's
+# row ids) — a K=1 micro-batch IS its solo form.  plus_src accumulates
+# floats, so coalesced columns match solo K=1 runs to tolerance, not bitwise.
+register_batchable("ppr", BatchSpec(
+    family="plus_src/personalized_pagerank", batched_app="personalized_pagerank",
+    source_param="seed", batch_param="seeds", semiring="plus_src", exact=False))
 
 
 # Deprecated alias: the live registry itself (mutations via register_app

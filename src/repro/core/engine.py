@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
 import warnings
 from pathlib import Path
@@ -366,6 +367,10 @@ class VSWEngine:
             self._get_shard, depth=self.config.prefetch_depth,
             stage=self._stage, nbytes=ELLShard.decoded_nbytes)
         self.last_result: RunResult | None = None
+        # serializes run() calls on this engine: concurrent clients (the
+        # serving layer) sharing one jitted engine run back-to-back instead
+        # of interleaving pipeline stats and per-iteration disk accounting
+        self._run_lock = threading.Lock()
 
     @classmethod
     def from_session(cls, session, program: VertexProgram,
@@ -391,14 +396,22 @@ class VSWEngine:
 
         if self.batched:
             # [n_pad, K] value matrix: one edge sweep advances K frontiers.
-            def shard_step(dst, x, src, cols, vals, row_map, start, num_rows):
+            # Per-column constants (PPR's reset vector) arrive through the
+            # runtime ``aux`` argument so the compiled step — and therefore
+            # the engine — is shared across source/seed sets (jit_signature).
+            has_aux = getattr(program, "make_aux", None) is not None
+
+            def shard_step(dst, x, src, aux, cols, vals, row_map, start, num_rows):
                 R = cols.shape[0]
                 K = src.shape[1]
                 seg = ell_spmv_batch(x, cols, vals, row_map, R, semiring,
                                      use_pallas=use_pallas)
                 old_slice = jax.lax.dynamic_slice(src, (start, 0), (R, K))
                 rows = start + jnp.arange(R)
-                new_slice = program.post(seg, old_slice, rows, n).astype(dst.dtype)
+                aux_slice = (jax.lax.dynamic_slice(aux, (start, 0), (R, K))
+                             if has_aux else None)
+                new_slice = program.post(seg, old_slice, rows, n,
+                                         aux_slice).astype(dst.dtype)
                 keep = (jnp.arange(R) < num_rows)[:, None]
                 new_slice = jnp.where(keep, new_slice, old_slice)
                 return jax.lax.dynamic_update_slice(dst, new_slice, (start, 0))
@@ -426,7 +439,42 @@ class VSWEngine:
     @property
     def _ckpt_tag(self) -> str:
         """Program identity recorded in checkpoints: name + frontier ids."""
-        return f"{self.program.name}:{tuple(self.program.sources)}"
+        return self._tag_for(self.program)
+
+    @staticmethod
+    def _tag_for(program) -> str:
+        return f"{program.name}:{tuple(program.sources)}"
+
+    def _check_program(self, program):
+        """A run-time program substitute must be jit-compatible: equal
+        non-None ``jit_signature`` guarantees the jitted step closures built
+        from ``self.program`` compute exactly its device functions (only
+        host-side init / sources / checkpoint tags differ).
+
+        The ``__code__`` comparison is a tripwire for a broken claim: fresh
+        instances from the same factory (and rename-only
+        ``dataclasses.replace`` derivatives like bfs) share code objects for
+        their device callables, but a program that kept an inherited
+        signature while overriding gather/post/changed does not — running it
+        here would silently execute the OLD compiled functions."""
+        if program is None or program is self.program:
+            return self.program
+        sig = getattr(program, "jit_signature", None)
+        if sig is None or sig != self.program.jit_signature:
+            raise ValueError(
+                f"program {program.name!r} (jit_signature={sig!r}) is not "
+                f"jit-compatible with this engine's {self.program.name!r} "
+                f"(jit_signature={self.program.jit_signature!r})")
+        for attr in ("gather_transform", "post", "changed"):
+            mine = getattr(getattr(self.program, attr), "__code__", None)
+            theirs = getattr(getattr(program, attr), "__code__", None)
+            if mine is not theirs:
+                raise ValueError(
+                    f"program {program.name!r} claims jit_signature {sig!r} "
+                    f"but its {attr} differs from this engine's compiled one "
+                    f"— a dataclasses.replace() that overrides device "
+                    f"callables must also replace jit_signature")
+        return program
 
     def _get_shard(self, p: int) -> ELLShard:
         if p in self._preloaded:
@@ -465,12 +513,21 @@ class VSWEngine:
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         resume: bool = False,
+        program: VertexProgram | None = None,
     ) -> Iterator[IterationStats]:
         """Generator form of ``run``: yields an IterationStats after every
         iteration (live monitoring), returns the RunResult on exhaustion
         (also stored in ``self.last_result``).  Batched programs return a
-        ``BatchRunResult`` with [n, K] values and per-column accounting."""
-        values, active_mask = self.program.init(self.n, self.in_deg, self.out_deg)
+        ``BatchRunResult`` with [n, K] values and per-column accounting.
+
+        ``program`` substitutes a jit-compatible program (equal
+        ``jit_signature``) for this run only: the engine keeps its compiled
+        shard steps while ``init``/``sources``/checkpoint tags come from the
+        substitute.  This is how one engine answers e.g. SSSP from any
+        source without recompiling — no engine state is mutated, so distinct
+        runs with distinct programs can share the instance."""
+        program = self._check_program(program)
+        values, active_mask = program.init(self.n, self.in_deg, self.out_deg)
         start_iter = 0
         ck_col_iters = None
         if resume and checkpoint_dir:
@@ -481,18 +538,27 @@ class VSWEngine:
                         f"checkpoint in {checkpoint_dir!r} holds values of "
                         f"shape {ck[0].shape}, but this program expects "
                         f"{values.shape}; it belongs to a different run")
-                if ck[4] is not None and ck[4] != self._ckpt_tag:
+                if ck[4] is not None and ck[4] != self._tag_for(program):
                     # same shapes, different program or landmark/seed set —
                     # continuing would return the OLD frontiers labeled with
                     # the caller's sources
                     raise ValueError(
                         f"checkpoint in {checkpoint_dir!r} was written by "
-                        f"{ck[4]!r}, not {self._ckpt_tag!r}; it belongs to "
-                        f"a different run")
+                        f"{ck[4]!r}, not {self._tag_for(program)!r}; it "
+                        f"belongs to a different run")
                 values, active_mask, start_iter, ck_col_iters = ck[:4]
         pad = self.n_pad - self.n
+        aux_dev = None
         if self.batched:
             vpad = np.pad(values.astype(np.float32), ((0, pad), (0, 0)))
+            make_aux = getattr(program, "make_aux", None)
+            if make_aux is not None:
+                aux_np = np.asarray(make_aux(self.n), dtype=np.float32)
+                aux_dev = jnp.asarray(np.pad(aux_np, ((0, pad), (0, 0))))
+            else:
+                # placeholder keeps the jitted call signature stable; the
+                # trace-time has_aux branch never touches it
+                aux_dev = jnp.zeros((1, 1), jnp.float32)
             # per-column frontiers: a shard is skipped only when NO column's
             # active set touches it, so schedule over the union of frontiers
             row_active = active_mask.any(axis=1)
@@ -500,7 +566,7 @@ class VSWEngine:
             # batched checkpoints always carry per-column counts
             col_iters = (ck_col_iters.astype(np.int64)
                          if ck_col_iters is not None
-                         else np.zeros(self.program.columns, dtype=np.int64))
+                         else np.zeros(program.columns, dtype=np.int64))
         else:
             vpad = np.pad(values.astype(np.float32), (0, pad))
             row_active = active_mask
@@ -531,10 +597,12 @@ class VSWEngine:
             dst = dst + 0.0  # materialize a copy so src survives for `changed`
             for _p, shard, dev in self._pipeline.stream(schedule):
                 cols_dev, vals_dev, row_map_dev = dev
-                dst = self._shard_step(
-                    dst, x, src, cols_dev, vals_dev, row_map_dev,
-                    shard.start_vertex, shard.end_vertex - shard.start_vertex,
-                )
+                tail = (cols_dev, vals_dev, row_map_dev, shard.start_vertex,
+                        shard.end_vertex - shard.start_vertex)
+                if self.batched:
+                    dst = self._shard_step(dst, x, src, aux_dev, *tail)
+                else:
+                    dst = self._shard_step(dst, x, src, *tail)
             changed = np.asarray(self._changed_fn(dst, src))
             last_changed = changed
             if self.batched:
@@ -566,7 +634,7 @@ class VSWEngine:
             if checkpoint_dir and checkpoint_every and (it + 1) % checkpoint_every == 0:
                 save_checkpoint(checkpoint_dir, np.asarray(src[: self.n]),
                                 changed, it + 1, col_iters=col_iters,
-                                tag=self._ckpt_tag)
+                                tag=self._tag_for(program))
             yield stats
             if active_ids.size == 0:
                 converged = True
@@ -579,7 +647,7 @@ class VSWEngine:
             # batched runs this is the full per-column [n, K] frontier)
             save_checkpoint(checkpoint_dir, final, last_changed,
                             len(history) + start_iter, col_iters=col_iters,
-                            tag=self._ckpt_tag)
+                            tag=self._tag_for(program))
         if self.batched:
             # global convergence (empty union frontier / empty schedule)
             # implies no column can ever update again
@@ -599,14 +667,22 @@ class VSWEngine:
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 0,
         resume: bool = False,
+        program: VertexProgram | None = None,
     ) -> RunResult:
-        gen = self.iter_run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
-                            checkpoint_every=checkpoint_every, resume=resume)
-        while True:
-            try:
-                next(gen)
-            except StopIteration as stop:
-                return stop.value
+        # the lock serializes whole runs, so concurrent callers sharing one
+        # engine (GraphService runner threads) see coherent per-iteration
+        # disk/stall accounting; iter_run itself stays lock-free because a
+        # generator holding a lock across yields could deadlock its consumer
+        with self._run_lock:
+            gen = self.iter_run(max_iters=max_iters,
+                                checkpoint_dir=checkpoint_dir,
+                                checkpoint_every=checkpoint_every,
+                                resume=resume, program=program)
+            while True:
+                try:
+                    next(gen)
+                except StopIteration as stop:
+                    return stop.value
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,13 @@
 """jit'd public wrappers for the SpMV kernels.
 
-``use_pallas='auto'`` runs the Pallas kernels in interpret mode on CPU (this
-container) and compiled mode on TPU; ``False`` selects the pure-jnp oracle
-path (used by the engine's reference mode and for A/B testing).
+``use_pallas='auto'`` picks the fastest correct path per platform: compiled
+Pallas kernels on TPU; on CPU the single-column kernels run Pallas in
+interpret mode (cheap enough, keeps the lowering exercised) but the BATCHED
+[n, K] fold falls back to the pure-jnp path — interpret mode executes the
+(K, R, W) grid step-by-step in Python and is ~10x slower per column, which
+would erase exactly the amortization ``run_batch``/GraphService exist for.
+``True`` forces Pallas (interpret on CPU — the A/B correctness tests use
+this); ``False`` forces the pure-jnp oracle path.
 """
 from __future__ import annotations
 
@@ -68,6 +73,8 @@ def ell_spmv_batch(x, cols, vals, row_map, num_segments: int, semiring: str,
     """
     xg = x[jnp.where(cols >= 0, cols, 0)]      # [R, W, K]
     use, interp = _resolve(use_pallas)
+    if use_pallas == "auto" and interp:
+        use = False  # interpret-mode cost scales with K; see module docstring
     if use:
         folded = _pallas.ell_fold_batch_pallas(
             jnp.transpose(xg, (2, 0, 1)), vals, cols, semiring, interpret=interp)

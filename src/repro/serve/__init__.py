@@ -1,1 +1,21 @@
-from repro.serve.engine import ServeEngine  # noqa: F401
+"""Serving layer.
+
+``GraphService`` (graph_service.py) is the graph-query service: concurrent
+single-query submissions dynamically micro-batched onto one shared
+``GraphSession``.  ``ServeEngine`` (engine.py) is the LLM serving engine
+kept from the seed code; it is imported lazily so graph serving does not
+pull the model stack in.
+"""
+from repro.serve.graph_service import (AdmissionError, GraphService,
+                                       ServiceClosed, ServiceConfig,
+                                       ServiceStats, percentile)
+
+__all__ = ["AdmissionError", "GraphService", "ServiceClosed", "ServiceConfig",
+           "ServiceStats", "percentile", "ServeEngine"]
+
+
+def __getattr__(name):
+    if name == "ServeEngine":
+        from repro.serve.engine import ServeEngine
+        return ServeEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,164 @@
+"""Closed-loop load generator for GraphService (``python -m repro.serve.bench``).
+
+Each of N client threads plays a user: submit one query, block on the
+future, immediately submit the next — so concurrency in flight equals the
+client count (a closed loop), and queries/sec measures the whole stack:
+admission, coalescing, the batched VSW sweep, and future resolution.
+
+The interesting comparison is the same traffic against two policies:
+
+* ``sequential`` — ``max_batch=1, max_wait_ms=0, max_inflight=1``: honest
+  one-query-at-a-time serving (what a naive wrapper around ``session.run``
+  would do);
+* ``batched`` — the real dynamic micro-batching policy.
+
+With K concurrent clients issuing compatible queries, batched serving
+should approach ONE sweep per K queries (PR 2's amortization), so
+throughput climbs with client count while sequential stays flat.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.serve.bench --scale 14 --clients 1 4 16
+
+(benchmarks/fig_serve_throughput.py drives the same harness for the
+acceptance sweep.)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.serve.graph_service import GraphService, ServiceConfig
+
+SEQUENTIAL = ServiceConfig(max_batch=1, max_wait_ms=0.0, max_inflight=1,
+                           memoize=False)
+
+
+def prepare_store(scale: int = 14, edge_factor: int = 8,
+                  base_dir: str | os.PathLike | None = None):
+    """Preprocess (once, cached on disk) an RMAT graph for serving benches."""
+    from repro.graph.generate import materialize, rmat_edges
+    from repro.graph.preprocess import preprocess_graph
+    from repro.graph.storage import GraphStore, write_edge_list
+
+    base = Path(base_dir or os.environ.get(
+        "BENCH_DIR", tempfile.gettempdir())) / "repro_serve_bench"
+    tag = f"s{scale}_e{edge_factor}"
+    out = base / f"store_{tag}"
+    if (out / "property.json").exists():
+        return GraphStore(out)
+    src, dst = materialize(rmat_edges(scale=scale, edge_factor=edge_factor,
+                                      seed=11))
+    el = base / f"el_{tag}"
+    if not (el / "meta.json").exists():
+        write_edge_list(el, [(src, dst)], num_vertices=1 << scale)
+    return preprocess_graph(str(el), str(out),
+                            threshold_edge_num=1 << max(scale - 2, 10),
+                            lane=16)
+
+
+def run_load(session, *, clients: int, queries_per_client: int,
+             config: ServiceConfig, app: str = "ppr", max_iters: int = 30,
+             seed: int = 0, warmup: bool = True) -> dict:
+    """Drive one closed-loop experiment; returns throughput + latency stats.
+
+    Every client issues ``queries_per_client`` queries of ``app`` from
+    deterministic, per-client-distinct sources (seeded), so runs are
+    reproducible and memoization cannot shortcut the measurement — the
+    speedup under test comes from COALESCING alone.
+    """
+    from repro.core.apps import batch_spec
+
+    n = session.n
+    spec = batch_spec(app)
+    param = spec.source_param if spec is not None else None
+    with GraphService(session, config) as svc:
+        if warmup:
+            svc.warmup(apps=(app,))
+        errors: list[BaseException] = []
+        lock = threading.Lock()
+
+        def client(cid: int) -> None:
+            for i in range(queries_per_client):
+                # distinct sources per (client, query): no two in-flight
+                # queries collapse to the same column or memo entry
+                source = (seed + cid * queries_per_client + i) * 9973 % n
+                try:
+                    kw = {param: source} if param else {}
+                    fut = svc.submit(app, max_iters=max_iters, **kw)
+                    fut.result()
+                except BaseException as exc:  # noqa: BLE001 — reported below
+                    with lock:
+                        errors.append(exc)
+                    return
+
+        threads = [threading.Thread(target=client, args=(c,), daemon=True)
+                   for c in range(clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        if errors:
+            raise errors[0]
+        snap = svc.stats.snapshot()
+    total = clients * queries_per_client
+    occ = snap["batch_occupancy"]
+    batches = sum(occ.values())
+    return dict(
+        clients=clients, queries=total, wall_seconds=wall,
+        qps=total / max(wall, 1e-9),
+        p50_ms=snap["p50_ms"], p95_ms=snap["p95_ms"], p99_ms=snap["p99_ms"],
+        mean_occupancy=(sum(k * v for k, v in occ.items()) / batches
+                        if batches else 0.0),
+        batches=batches, disk_bytes=session.stats.disk_bytes,
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Closed-loop GraphService throughput benchmark")
+    ap.add_argument("--scale", type=int, default=14,
+                    help="RMAT scale (2^scale vertices)")
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--clients", type=int, nargs="+", default=[1, 4, 16])
+    ap.add_argument("--queries", type=int, default=8,
+                    help="queries per client")
+    ap.add_argument("--app", default="ppr",
+                    help="ppr (seed queries; the amortization-friendly "
+                         "workload) / sssp / bfs / cc / pagerank")
+    ap.add_argument("--max-iters", type=int, default=30)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=25.0)
+    ap.add_argument("--max-inflight", type=int, default=2)
+    ap.add_argument("--graph", default=None,
+                    help="serve an existing preprocessed graph instead of "
+                         "generating one")
+    args = ap.parse_args(argv)
+
+    from repro.session import GraphSession
+
+    store = args.graph or prepare_store(args.scale, args.edge_factor)
+    batched = ServiceConfig(max_batch=args.max_batch,
+                            max_wait_ms=args.max_wait_ms,
+                            max_inflight=args.max_inflight, memoize=False)
+    print("policy,clients,qps,p50_ms,p95_ms,p99_ms,mean_occupancy,disk_MB")
+    for clients in args.clients:
+        for name, cfg in (("sequential", SEQUENTIAL), ("batched", batched)):
+            with GraphSession(store) as session:
+                r = run_load(session, clients=clients,
+                             queries_per_client=args.queries, config=cfg,
+                             app=args.app, max_iters=args.max_iters)
+            print(f"{name},{clients},{r['qps']:.2f},{r['p50_ms']:.1f},"
+                  f"{r['p95_ms']:.1f},{r['p99_ms']:.1f},"
+                  f"{r['mean_occupancy']:.2f},{r['disk_bytes']/1e6:.1f}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,621 @@
+"""GraphService: concurrent graph-query serving with dynamic micro-batching.
+
+The ROADMAP's north star is "serve heavy traffic from millions of users";
+query-centric systems (Yan et al.'s "quegel" point-query model, NXgraph)
+show that workload is many concurrent POINT queries, not one batch job.
+``GraphSession.run_batch`` (PR 2) already answers K compatible queries for
+roughly ONE sweep of disk I/O — this module turns an arbitrary stream of
+independent client requests into those K-column sweeps:
+
+    client threads --submit()--> pending queue --coalesce--> run_batch
+         ^                                                      |
+         +-- future.result()  <--- per-column RunResult --------+
+
+* ``submit("sssp", source=7)`` returns a ``concurrent.futures.Future``
+  immediately; many client threads may submit concurrently.
+* A dispatcher thread groups compatible pending requests — same
+  ``BatchSpec.family`` (app family + semiring) and identical non-source
+  parameters — into micro-batches of up to ``max_batch`` columns, waiting
+  at most ``max_wait_ms`` for stragglers (classic dynamic batching).
+* Batches execute on a runner pool (``max_inflight`` concurrent sweeps)
+  against ONE shared ``GraphSession`` — one compressed cache, one prefetch
+  pipeline, engines shared by ``jit_signature`` so a stream of distinct
+  source sets never recompiles.
+* Non-batchable apps (global pagerank, cc) coalesce by exact identity:
+  duplicate in-flight requests share a single engine run.
+* A small memo layer keyed on (app, params, graph mtime) serves repeated
+  hot queries (popular PPR seeds) without any sweep at all.
+
+Batch padding: groups are padded up to the next power of two (duplicating
+the last source) so the jitted [n, K] shard steps specialize on
+O(log max_batch) distinct K values instead of every group size the traffic
+happens to produce; padded columns are dropped before resolution.
+
+Exactness: min-propagation families (sssp/bfs) resolve futures bitwise
+identical to a solo ``session.run`` of the same query regardless of
+batching (the semiring ops are exact and column-independent).  plus_src
+(ppr) matches its solo K=1 form to float tolerance (``BatchSpec.exact``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from collections import Counter, OrderedDict, deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from math import ceil
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.apps import available_apps, batch_spec
+
+
+class ServiceClosed(RuntimeError):
+    """submit() after close(): the service no longer accepts work."""
+
+
+class AdmissionError(RuntimeError):
+    """Request refused by admission control (queue full / app not served)."""
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Batching / admission policy for a GraphService.
+
+    max_batch:
+        Column cap per micro-batch (K of the underlying ``run_batch``).
+    max_wait_ms:
+        How long the dispatcher holds a partially-filled batch open for
+        stragglers, measured from the OLDEST pending request.  0 disables
+        waiting: every dispatch takes whatever is queued right now
+        (latency-optimal, occupancy-pessimal).
+    max_inflight:
+        Concurrent sweeps on the runner pool.  1 serializes all engine work
+        (often right on small machines — sweeps are already parallel
+        internally); >1 lets independent families overlap.
+    max_queue:
+        Admission bound on pending (not yet dispatched) requests; submit()
+        raises AdmissionError beyond it instead of growing an unbounded
+        backlog.
+    apps:
+        Per-app admission allowlist; None serves every registered app plus
+        the batch-only names ("ppr").
+    memoize / memo_capacity / memo_budget_bytes:
+        Result memoization keyed on (app, params, graph mtime): repeated hot
+        queries skip the sweep entirely.  LRU-bounded at ``memo_capacity``
+        entries AND ``memo_budget_bytes`` of result values (each entry holds
+        a full length-n vector, so the byte bound is the one that matters on
+        big graphs; a result larger than the whole budget is simply not
+        memoized).  Results are shared objects — callers must treat them as
+        read-only.
+    pad_batches:
+        Pad groups to the next power of two (see module docstring); disable
+        only to measure the recompile cost it avoids.
+    max_iters:
+        Default iteration cap applied when a request does not pass its own
+        ``max_iters``.
+    """
+
+    max_batch: int = 16
+    max_wait_ms: float = 2.0
+    max_inflight: int = 2
+    max_queue: int = 1024
+    apps: tuple | None = None
+    memoize: bool = True
+    memo_capacity: int = 256
+    memo_budget_bytes: int = 1 << 28
+    pad_batches: bool = True
+    max_iters: int = 200
+
+    def __post_init__(self):
+        if not isinstance(self.max_batch, int) or self.max_batch < 1:
+            raise ValueError(f"max_batch must be an int >= 1, got "
+                             f"{self.max_batch!r}")
+        if not isinstance(self.max_wait_ms, (int, float)) \
+                or self.max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got "
+                             f"{self.max_wait_ms!r}")
+        if not isinstance(self.max_inflight, int) or self.max_inflight < 1:
+            raise ValueError(f"max_inflight must be an int >= 1, got "
+                             f"{self.max_inflight!r}")
+        if not isinstance(self.max_queue, int) or self.max_queue < 1:
+            raise ValueError(f"max_queue must be an int >= 1, got "
+                             f"{self.max_queue!r}")
+        if self.apps is not None:
+            object.__setattr__(self, "apps", tuple(self.apps))
+        if not isinstance(self.memo_capacity, int) or self.memo_capacity < 0:
+            raise ValueError(f"memo_capacity must be an int >= 0, got "
+                             f"{self.memo_capacity!r}")
+        if not isinstance(self.memo_budget_bytes, int) \
+                or self.memo_budget_bytes < 0:
+            raise ValueError(f"memo_budget_bytes must be an int >= 0, got "
+                             f"{self.memo_budget_bytes!r}")
+        if not isinstance(self.max_iters, int) or self.max_iters < 1:
+            raise ValueError(f"max_iters must be an int >= 1, got "
+                             f"{self.max_iters!r}")
+
+    def replace(self, **changes) -> "ServiceConfig":
+        return dataclasses.replace(self, **changes)
+
+
+# ---------------------------------------------------------------------------
+# statistics
+# ---------------------------------------------------------------------------
+def _nearest_rank(ordered, q: float) -> float:
+    """The ceil(q/100 * N)-th smallest of an ALREADY-SORTED sequence."""
+    if not ordered:
+        return 0.0
+    return float(ordered[ceil(q / 100.0 * len(ordered)) - 1])
+
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile: the ceil(q/100 * N)-th smallest value.
+
+    Deliberately NOT an interpolating estimator — every reported latency is
+    a latency some request actually saw, and the regression test in
+    tests/test_serve_service.py pins this definition so the math cannot
+    silently drift (snapshot() reports through the same ``_nearest_rank``).
+    """
+    if not 0 < q <= 100:
+        raise ValueError(f"percentile q must be in (0, 100], got {q!r}")
+    return _nearest_rank(sorted(values), q)
+
+
+class ServiceStats:
+    """Thread-safe serving counters + latency/occupancy distributions.
+
+    ``snapshot()`` returns one self-consistent dict: request counts
+    (submitted/completed/memo_hits/rejected/failed), current and peak queue
+    depth, p50/p95/p99/mean latency in milliseconds (nearest-rank, see
+    ``percentile``), the batch-occupancy histogram {K: batches executed
+    with K live columns}, and ``cache_served_fraction`` (memo hits over
+    completed requests).
+
+    Latency percentiles cover the most recent ``latency_window`` completed
+    requests (a bounded deque — a long-lived daemon must not accumulate one
+    float per request forever); the counters are lifetime totals.
+    """
+
+    LATENCY_WINDOW = 65536
+
+    def __init__(self, latency_window: int = LATENCY_WINDOW):
+        self._lock = threading.Lock()
+        # seconds, one per completed request, most recent window only
+        self._latencies: deque[float] = deque(maxlen=latency_window)
+        self.batch_occupancy: Counter = Counter()
+        self.submitted = 0
+        self.completed = 0
+        self.memo_hits = 0
+        self.rejected = 0
+        self.failed = 0
+        self.queue_depth = 0
+        self.queue_peak = 0
+
+    # -- recording hooks (service-internal) -----------------------------
+    def record_submitted(self, queue_depth: int) -> None:
+        with self._lock:
+            self.submitted += 1
+            self.queue_depth = queue_depth
+            self.queue_peak = max(self.queue_peak, queue_depth)
+
+    def record_dequeued(self, queue_depth: int) -> None:
+        with self._lock:
+            self.queue_depth = queue_depth
+
+    def record_rejected(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def record_batch(self, occupancy: int) -> None:
+        with self._lock:
+            self.batch_occupancy[occupancy] += 1
+
+    def record_latency(self, seconds: float, memo_hit: bool = False) -> None:
+        with self._lock:
+            self._latencies.append(float(seconds))
+            self.completed += 1
+            self.memo_hits += int(memo_hit)
+
+    def record_failed(self, count: int = 1) -> None:
+        with self._lock:
+            self.failed += count
+
+    # -- reading ---------------------------------------------------------
+    def latency_ms(self, q: float) -> float:
+        with self._lock:
+            lats = list(self._latencies)
+        return percentile(lats, q) * 1e3
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            lats = list(self._latencies)
+            occ = dict(sorted(self.batch_occupancy.items()))
+            completed, memo = self.completed, self.memo_hits
+            snap = dict(
+                submitted=self.submitted, completed=completed,
+                memo_hits=memo, rejected=self.rejected, failed=self.failed,
+                queue_depth=self.queue_depth, queue_peak=self.queue_peak,
+            )
+        ordered = sorted(lats)  # sort once, rank three times
+        snap.update(
+            p50_ms=_nearest_rank(ordered, 50) * 1e3,
+            p95_ms=_nearest_rank(ordered, 95) * 1e3,
+            p99_ms=_nearest_rank(ordered, 99) * 1e3,
+            mean_ms=float(np.mean(ordered)) * 1e3 if ordered else 0.0,
+            batch_occupancy=occ,
+            cache_served_fraction=memo / completed if completed else 0.0,
+        )
+        return snap
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Request:
+    app: str
+    params: dict            # full request params minus the source (if batched)
+    source: int | None      # frontier vertex for batchable apps
+    group_key: tuple        # requests with equal keys may share one execution
+    memo_key: tuple | None
+    future: Future
+    t_submit: float         # time.perf_counter() at admission
+
+
+def _params_key(params: dict) -> tuple:
+    return tuple(sorted(params.items()))
+
+
+def _next_pow2(k: int) -> int:
+    return 1 << (k - 1).bit_length()
+
+
+class GraphService:
+    """Thread-safe concurrent query service over ONE shared GraphSession.
+
+    See the module docstring for the architecture.  Lifecycle::
+
+        svc = session.service(max_batch=16)      # started on construction
+        futs = [svc.submit("sssp", source=s) for s in sources]
+        dists = [f.result().values for f in futs]
+        svc.close()                              # drains pending work
+
+    or as a context manager (``with session.service() as svc:``).
+    """
+
+    def __init__(self, session, config: ServiceConfig | None = None,
+                 **overrides):
+        if config is None:
+            config = ServiceConfig(**overrides)
+        elif overrides:
+            config = config.replace(**overrides)
+        self.session = session
+        self.config = config
+        self.stats = ServiceStats()
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._pending: deque[_Request] = deque()
+        # per-group pending counts, maintained on every append/pop: the
+        # dispatcher's wait loop and full-group lookup stay O(#groups),
+        # not O(queue length), under the lock submit() contends on
+        self._pending_counts: Counter = Counter()
+        self._closing = False
+        self._closed = False
+        self._memo: OrderedDict = OrderedDict()  # key -> (result, nbytes)
+        self._memo_bytes = 0
+        self._graph_token = self._compute_graph_token(session.store)
+        self._inflight = threading.Semaphore(config.max_inflight)
+        self._runners = ThreadPoolExecutor(
+            max_workers=config.max_inflight, thread_name_prefix="graphserve")
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="graphserve-dispatch", daemon=True)
+        self._dispatcher.start()
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _compute_graph_token(store) -> tuple:
+        """Identity of the graph snapshot for memo keys: a re-preprocessed
+        (or re-packed) graph at the same path must not serve stale results."""
+        path = getattr(store, "path", None)
+        if isinstance(path, (str, Path)):
+            p = Path(str(path))
+            probe = p / "property.json" if p.is_dir() else p
+            try:
+                return (str(p), probe.stat().st_mtime_ns)
+            except OSError:
+                pass
+        return ("unversioned", id(store))
+
+    def _served_apps(self) -> tuple:
+        if self.config.apps is not None:
+            return self.config.apps
+        return tuple(sorted(set(available_apps()) | {"ppr"}))
+
+    # ------------------------------------------------------------------
+    def submit(self, app: str, **params) -> Future:
+        """Queue one query; returns a future resolving to its RunResult.
+
+        ``app`` is a registered single-query name (``"sssp"``, ``"bfs"``,
+        ``"cc"``, ``"pagerank"``) or a batch-only name (``"ppr"``);
+        ``params`` are its factory arguments (``source=``, ``seed=``,
+        ``damping=``...) plus an optional ``max_iters``.  Raises
+        ``ServiceClosed`` after ``close()`` and ``AdmissionError`` when the
+        pending queue is at ``max_queue`` or ``app`` is not served.
+        """
+        t0 = time.perf_counter()
+        spec = batch_spec(app)
+        if app not in self._served_apps():
+            self.stats.record_rejected()
+            raise AdmissionError(
+                f"app {app!r} is not served here (serving "
+                f"{self._served_apps()})")
+        params = dict(params)
+        params.setdefault("max_iters", self.config.max_iters)
+        source = None
+        if spec is not None:
+            if spec.source_param not in params:
+                raise TypeError(
+                    f"{app!r} needs {spec.source_param}=<vertex id>")
+            source = int(params.pop(spec.source_param))
+            if source < 0:
+                raise ValueError(
+                    f"{spec.source_param} must be >= 0, got {source}")
+            group_key = ("batch", spec.family, _params_key(params))
+            memo_key = (app, source, _params_key(params), self._graph_token)
+        else:
+            group_key = ("solo", app, _params_key(params))
+            memo_key = (app, None, _params_key(params), self._graph_token)
+        if not self.config.memoize:
+            memo_key = None
+
+        future: Future = Future()
+        with self._cond:
+            if self._closing:
+                raise ServiceClosed("GraphService is closed")
+            if memo_key is not None:
+                hit = self._memo.get(memo_key)
+                if hit is not None:
+                    self._memo.move_to_end(memo_key)
+                    future.set_result(hit[0])
+                    self.stats.record_submitted(len(self._pending))
+                    self.stats.record_latency(time.perf_counter() - t0,
+                                              memo_hit=True)
+                    return future
+            if len(self._pending) >= self.config.max_queue:
+                self.stats.record_rejected()
+                raise AdmissionError(
+                    f"pending queue full ({self.config.max_queue} requests);"
+                    " retry later")
+            req = _Request(app=app, params=params, source=source,
+                           group_key=group_key, memo_key=memo_key,
+                           future=future, t_submit=t0)
+            self._pending.append(req)
+            self._pending_counts[group_key] += 1
+            self.stats.record_submitted(len(self._pending))
+            self._cond.notify_all()
+        return future
+
+    def submit_many(self, queries) -> list[Future]:
+        """``submit`` for an iterable of ``(app, params_dict)`` pairs."""
+        return [self.submit(app, **params) for app, params in queries]
+
+    # ------------------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        cfg = self.config
+        while True:
+            with self._cond:
+                while not self._pending and not self._closing:
+                    self._cond.wait()
+                if not self._pending:
+                    return  # closing and drained
+                head = self._pending[0]
+                # dynamic batching: hold the head's group open for
+                # stragglers until max_wait_ms after ITS admission —
+                # bounded added latency, whatever occupancy traffic allows.
+                # If ANY group fills to max_batch meanwhile, dispatch that
+                # one immediately instead of making a ready batch queue
+                # behind the head's straggler window (no head-of-line block)
+                deadline = head.t_submit + cfg.max_wait_ms / 1e3
+                while (not self._closing
+                       and self._pending_counts[head.group_key] < cfg.max_batch
+                       and self._full_group() is None):
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(remaining)
+                    if not self._pending or self._pending[0] is not head:
+                        break  # group got dispatched or cancelled under us
+                if not self._pending:
+                    continue
+                key = self._full_group() or self._pending[0].group_key
+                group = self._take_group(key)
+                self.stats.record_dequeued(len(self._pending))
+            if not group:
+                continue
+            # bounded in-flight sweeps: acquiring here (dispatcher thread)
+            # applies backpressure — the queue keeps admitting up to
+            # max_queue while every runner is busy
+            self._inflight.acquire()
+            try:
+                self._runners.submit(self._run_group, group)
+            except BaseException:
+                self._inflight.release()
+                for r in group:
+                    r.future.set_exception(ServiceClosed(
+                        "runner pool rejected the batch"))
+                if self._closing:
+                    return
+                raise
+
+    def _full_group(self) -> tuple | None:
+        """A group key with max_batch requests pending, if any (O(#groups))."""
+        for key, count in self._pending_counts.items():
+            if count >= self.config.max_batch:
+                return key
+        return None
+
+    def _take_group(self, key: tuple) -> list[_Request]:
+        """Pop up to max_batch requests sharing ``key`` (queue order).
+
+        Marks each taken future running (``set_running_or_notify_cancel``),
+        which both drops client-cancelled requests and makes the later
+        ``set_result`` race-free against ``Future.cancel``."""
+        group, rest = [], deque()
+        for r in self._pending:
+            if r.group_key == key and len(group) < self.config.max_batch:
+                self._pending_counts[key] -= 1
+                if r.future.set_running_or_notify_cancel():
+                    group.append(r)
+            else:
+                rest.append(r)
+        if self._pending_counts[key] <= 0:
+            del self._pending_counts[key]
+        self._pending = rest
+        return group
+
+    # ------------------------------------------------------------------
+    def _run_group(self, group: list[_Request]) -> None:
+        try:
+            kind = group[0].group_key[0]
+            if kind == "batch":
+                self._run_batched(group)
+            else:
+                self._run_solo(group)
+        except BaseException as exc:  # noqa: BLE001 — delivered via futures
+            self.stats.record_failed(sum(1 for r in group
+                                         if not r.future.done()))
+            for r in group:
+                if not r.future.done():
+                    r.future.set_exception(exc)
+        finally:
+            self._inflight.release()
+
+    def _run_batched(self, group: list[_Request]) -> None:
+        spec = batch_spec(group[0].app)
+        params = dict(group[0].params)
+        max_iters = params.pop("max_iters")
+        sources = [r.source for r in group]
+        if self.config.pad_batches:
+            # duplicate the tail source up to the next power of two (capped
+            # at max_batch, which need not be one): the jitted [n, K] step
+            # then specializes on O(log max_batch) K values, matching
+            # warmup()'s ladder; duplicated columns are computed-and-dropped
+            k = min(_next_pow2(len(group)), self.config.max_batch)
+            sources = sources + [sources[-1]] * (k - len(group))
+        results = self.session.run_batch(
+            spec.batched_app, max_iters=max_iters,
+            **{spec.batch_param: sources}, **params)
+        self.stats.record_batch(len(group))
+        self._resolve(group, results[: len(group)])
+
+    def _run_solo(self, group: list[_Request]) -> None:
+        """Identical solo requests (one group_key == one exact query)
+        coalesce into a single engine run resolving every future."""
+        params = dict(group[0].params)
+        result = self.session.run(group[0].app, **params)
+        self.stats.record_batch(len(group))
+        self._resolve(group, itertools.repeat(result))
+
+    def _resolve(self, group: list[_Request], results) -> None:
+        now = time.perf_counter()
+        memo_items = []
+        for r, res in zip(group, results):
+            r.future.set_result(res)
+            self.stats.record_latency(now - r.t_submit)
+            if r.memo_key is not None:
+                memo_items.append((r.memo_key, res))
+        if memo_items and self.config.memo_capacity \
+                and self.config.memo_budget_bytes:
+            with self._cond:
+                for key, res in memo_items:
+                    nbytes = getattr(res.values, "nbytes", 0)
+                    if nbytes > self.config.memo_budget_bytes:
+                        continue  # one result outweighs the whole budget
+                    old = self._memo.pop(key, None)
+                    if old is not None:
+                        self._memo_bytes -= old[1]
+                    self._memo[key] = (res, nbytes)
+                    self._memo_bytes += nbytes
+                while len(self._memo) > self.config.memo_capacity \
+                        or self._memo_bytes > self.config.memo_budget_bytes:
+                    _, (_, dropped) = self._memo.popitem(last=False)
+                    self._memo_bytes -= dropped
+
+    # ------------------------------------------------------------------
+    def warmup(self, apps=("sssp",)) -> None:
+        """Pre-compile the jitted shard steps the batching policy can hit:
+        one ``max_iters=1`` run per (app, padded batch size).  Optional —
+        first requests pay the compiles otherwise."""
+        sizes = {1}
+        if self.config.pad_batches:
+            k = 1
+            while k < self.config.max_batch:
+                k = min(k * 2, self.config.max_batch)
+                sizes.add(k)
+        else:
+            sizes = set(range(1, self.config.max_batch + 1))
+        for app in apps:
+            spec = batch_spec(app)
+            if spec is None:
+                self.session.run(app, max_iters=1)
+                continue
+            for k in sorted(sizes):
+                self.session.run_batch(spec.batched_app, max_iters=1,
+                                       **{spec.batch_param: list(range(k))})
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def close(self, drain: bool = True, timeout: float | None = None) -> None:
+        """Stop accepting work and shut down.
+
+        ``drain=True`` (default) runs every pending request to completion
+        first; ``drain=False`` fails pending futures with ``ServiceClosed``
+        (requests already executing still complete).  ``timeout`` bounds the
+        drain (seconds); on expiry the remaining UNDISPATCHED requests are
+        failed with ``ServiceClosed`` rather than left hanging — a client
+        blocked in ``future.result()`` always gets an answer.  Idempotent.
+        """
+        with self._cond:
+            if self._closed:
+                return
+            self._closing = True
+            if not drain:
+                self._fail_pending_locked()
+            self._cond.notify_all()
+        self._dispatcher.join(timeout)
+        if self._dispatcher.is_alive():
+            # drain timed out mid-backlog: fail what was never dispatched so
+            # no caller waits forever, then let the dispatcher wind down
+            with self._cond:
+                self._fail_pending_locked()
+                self._cond.notify_all()
+            self._dispatcher.join()
+        self._runners.shutdown(wait=True)
+        self._closed = True
+
+    def _fail_pending_locked(self) -> None:
+        while self._pending:
+            r = self._pending.popleft()
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_exception(
+                    ServiceClosed("GraphService closed before this "
+                                  "request was dispatched"))
+        self._pending_counts.clear()
+
+    def __enter__(self) -> "GraphService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return (f"GraphService({self.session!r}, max_batch="
+                f"{self.config.max_batch}, queue={self.queue_depth})")

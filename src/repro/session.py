@@ -42,10 +42,21 @@ seeds) through ONE sweep of the edge shards per iteration:
 
     dists = s.run_batch("sssp", sources=[0, 17, 4095])   # 3 frontiers,
     # ...one [n, 3] value matrix, one pass of disk + decompression
+
+For many concurrent CLIENTS (a query-serving workload rather than one
+analyst), ``session.service()`` wraps the session in a thread-safe
+``GraphService`` that coalesces independent submissions into those
+K-column batches dynamically — see repro/serve/graph_service.py.
+
+Thread-safety: ``run``/``run_batch`` may be called from multiple threads.
+The compressed cache takes its own lock, the engine cache is locked here,
+engines are shared by ``jit_signature`` (identical compiled steps) with
+the concrete program pinned per call, and each engine serializes its runs.
 """
 from __future__ import annotations
 
 import os
+import threading
 from collections import OrderedDict
 from typing import Iterable, Iterator
 
@@ -175,6 +186,11 @@ class GraphSession:
             raise ValueError(f"max_engines must be >= 1, got {max_engines}")
         self.max_engines = max_engines
         self._engines: "OrderedDict" = OrderedDict()
+        # engine-cache lock: GraphService runner threads resolve engines
+        # concurrently; the cache itself (CompressedShardCache) has its own
+        # lock, and each engine serializes its runs — together these make
+        # run()/run_batch() safe to call from many threads
+        self._engines_lock = threading.RLock()
         # combined [n, K] result of the most recent run_batch (survives
         # engine-cache eviction, unlike engine(...).last_result)
         self.last_batch_result: BatchRunResult | None = None
@@ -186,28 +202,65 @@ class GraphSession:
                 raise TypeError(
                     "application kwargs only apply when dispatching by name; "
                     f"got a VertexProgram plus {sorted(app_kwargs)}")
-            return app, ("prog", id(app))
-        program = get_app(app, **app_kwargs)
-        return program, ("name", app, tuple(sorted(app_kwargs.items())))
+            program = app
+        else:
+            program = get_app(app, **app_kwargs)
+        # programs declaring a jit_signature share engines across every
+        # parameterization with identical device callables (e.g. ALL sssp
+        # sources, ALL K-landmark sets of the same K): the signature is the
+        # cache key and the concrete program is handed to run() per call,
+        # so a serving workload never recompiles per source set
+        sig = getattr(program, "jit_signature", None)
+        if sig is not None:
+            return program, ("sig", sig)
+        if isinstance(app, str):
+            return program, ("name", app, tuple(sorted(app_kwargs.items())))
+        return program, ("prog", id(program))
 
     def engine(self, app: str | VertexProgram, config: EngineConfig | None = None,
                **app_kwargs) -> VSWEngine:
         """The session-shared engine for an application (built once per
-        (program, config); reuse keeps the jitted step caches warm)."""
+        (jit_signature or program, config); reuse keeps the jitted step
+        caches warm).  The returned engine's default program is rebound to
+        the one just requested, so single-threaded ``engine(...).run()``
+        works; concurrent callers should go through ``session.run`` /
+        ``run_batch`` (which pin the program per call) instead."""
         program, prog_key = self._resolve(app, app_kwargs)
+        return self._engine_for(program, prog_key, config)
+
+    def _run_target(self, app, app_kwargs, config):
+        """(engine, program-to-pin) for one run.
+
+        Signature-keyed engines get the resolved program pinned per call
+        (thread-safe sharing across parameterizations).  Name-keyed engines
+        (no jit_signature) run their OWN program: the cache key already
+        proves name+kwargs equality, and a fresh factory instance would
+        fail _check_program's identity test."""
+        program, prog_key = self._resolve(app, app_kwargs)
+        eng = self._engine_for(program, prog_key, config)
+        return eng, (program if prog_key[0] == "sig" else None)
+
+    def _engine_for(self, program, prog_key, config) -> VSWEngine:
         key = (prog_key, config or self.config)
-        eng = self._engines.get(key)
-        if eng is None:
-            eng = VSWEngine.from_session(self, program, config)
-            if prog_key[0] == "prog":
-                # a raw-id key must keep the program alive to stay unique
-                eng._keyed_program = program
-            self._engines[key] = eng
-            while len(self._engines) > self.max_engines:
-                self._engines.popitem(last=False)  # drop the LRU engine
-        else:
-            self._engines.move_to_end(key)
-        return eng
+        with self._engines_lock:
+            eng = self._engines.get(key)
+            if eng is None:
+                eng = VSWEngine.from_session(self, program, config)
+                if prog_key[0] == "prog":
+                    # a raw-id key must keep the program alive to stay unique
+                    eng._keyed_program = program
+                self._engines[key] = eng
+                while len(self._engines) > self.max_engines:
+                    self._engines.popitem(last=False)  # drop the LRU engine
+            else:
+                self._engines.move_to_end(key)
+                if eng.program is not program and prog_key[0] == "sig":
+                    # same compiled steps, new default host-side identity;
+                    # _check_program trips on a false jit_signature claim
+                    # (device callables differing from the compiled ones)
+                    eng._check_program(program)
+                    eng.program = program
+            return eng
 
     # -- running --------------------------------------------------------
     def run(self, app: str | VertexProgram, *, max_iters: int = 200,
@@ -243,9 +296,12 @@ class GraphSession:
         ``converged``, and ``history`` (one ``IterationStats`` per
         iteration — disk bytes, cache hit ratio, stall/fetch seconds).
         """
-        eng = self.engine(app, config, **app_kwargs)
+        # the program rides along explicitly: engines shared by jit_signature
+        # stay stateless across concurrent runs (thread-safety contract)
+        eng, run_program = self._run_target(app, app_kwargs, config)
         return eng.run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
-                       checkpoint_every=checkpoint_every, resume=resume)
+                       checkpoint_every=checkpoint_every, resume=resume,
+                       program=run_program)
 
     def iter_run(self, app: str | VertexProgram, *, max_iters: int = 200,
                  checkpoint_dir: str | None = None, checkpoint_every: int = 0,
@@ -266,9 +322,10 @@ class GraphSession:
                     result = stop.value
                     break
         """
-        eng = self.engine(app, config, **app_kwargs)
+        eng, run_program = self._run_target(app, app_kwargs, config)
         return eng.iter_run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
-                            checkpoint_every=checkpoint_every, resume=resume)
+                            checkpoint_every=checkpoint_every, resume=resume,
+                            program=run_program)
 
     def run_batch(self, app: str | BatchedVertexProgram = "sssp", *,
                   sources: Iterable[int] | None = None, max_iters: int = 200,
@@ -310,7 +367,7 @@ class GraphSession:
                     "sources= only applies when dispatching by name; the "
                     "BatchedVertexProgram already fixes its frontiers")
             # forward app_kwargs so misuse raises like run() does
-            eng = self.engine(app, config, **app_kwargs)
+            program, prog_key = self._resolve(app, app_kwargs)
         else:
             name = _BATCH_ALIASES.get(app, app)
             param = "seeds" if name in _SEED_PARAM_APPS else "sources"
@@ -325,20 +382,23 @@ class GraphSession:
             else:
                 raise TypeError("run_batch needs sources=[...] when "
                                 "dispatching by name")
-            # name-keyed dispatch so repeat calls reuse the engine (and its
-            # jitted [n, K] shard steps) via the session's engine cache
+            # signature-keyed dispatch so repeat calls reuse the engine (and
+            # its jitted [n, K] shard steps) — across DIFFERENT landmark
+            # sets of the same K, not just repeats of one set
             try:
-                eng = self.engine(name, config, **app_kwargs)
+                program, prog_key = self._resolve(name, app_kwargs)
             except TypeError as exc:
                 if f"unexpected keyword argument {param!r}" in str(exc):
                     # the factory has no frontier parameter at all
                     raise TypeError(
                         f"{name!r} is not a batched application") from None
                 raise  # genuine bad kwarg — keep the factory's own message
-        if not eng.batched:
+        if not isinstance(program, BatchedVertexProgram):
             raise TypeError(f"{app!r} is not a batched application")
+        eng = self._engine_for(program, prog_key, config)
         result = eng.run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
-                         checkpoint_every=checkpoint_every, resume=resume)
+                         checkpoint_every=checkpoint_every, resume=resume,
+                         program=program if prog_key[0] == "sig" else None)
         assert isinstance(result, BatchRunResult)
         self.last_batch_result = result
         return result.columns()
@@ -358,6 +418,27 @@ class GraphSession:
             else:
                 results.append(self.run(item, **run_kwargs))
         return results
+
+    def service(self, config=None, **overrides):
+        """A concurrent query service over this session.
+
+        Returns a started ``repro.serve.GraphService`` wrapping this
+        session: many client threads ``submit()`` single queries, the
+        service coalesces compatible ones into K-column micro-batches served
+        by ``run_batch`` through the shared compressed cache, and each
+        caller gets its own future/``RunResult``.  ``config`` is a
+        ``repro.serve.ServiceConfig``; keyword overrides
+        (``max_batch=...``, ``max_wait_ms=...``) adjust single fields::
+
+            with GraphSession(path) as s, s.service(max_batch=16) as svc:
+                fut = svc.submit("sssp", source=42)
+                print(fut.result().values[:10])
+
+        The session must outlive the service (close the service first —
+        the ``with`` form above nests them correctly).
+        """
+        from repro.serve.graph_service import GraphService
+        return GraphService(self, config, **overrides)
 
     # -- observability / lifecycle --------------------------------------
     @property

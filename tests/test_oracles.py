@@ -15,6 +15,14 @@ from repro.graph.preprocess import preprocess_graph
 from repro.graph.storage import write_edge_list
 from repro.session import GraphSession
 
+try:  # external oracle (optional): cross-validation against NetworkX
+    import networkx as nx
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    nx = None
+
+needs_networkx = pytest.mark.skipif(nx is None,
+                                    reason="networkx not installed")
+
 # ---------------------------------------------------------------------------
 # pure-NumPy reference implementations (independent of the engine stack)
 # ---------------------------------------------------------------------------
@@ -142,3 +150,88 @@ def test_bfs_and_sssp_oracles_agree():
     dst = rng.integers(0, 64, size=256)
     np.testing.assert_array_equal(oracle_sssp(src, dst, 64, 0),
                                   oracle_bfs(src, dst, 64, 0))
+
+
+# ---------------------------------------------------------------------------
+# external oracle: NetworkX (closes the in-repo-only-reference gap).  The
+# NumPy oracles above and the engine share this repo; NetworkX shares
+# nothing with it, so agreement here rules out a common-mode bug.
+# ---------------------------------------------------------------------------
+def _random_digraph(seed, n, m, symmetric=False, ensure_out=True):
+    """Deduplicated random edges; ``ensure_out`` adds the ring edge
+    i -> (i+1) % n so no vertex dangles.  Dedup matters: nx.DiGraph
+    collapses parallel edges while the engine (and np.add.at) counts them;
+    no-dangling matters for PageRank: nx redistributes dangling mass, the
+    paper's update lets it leak.  (The ring also connects everything, so
+    component tests must pass ensure_out=False.)"""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    if ensure_out:
+        src = np.concatenate([src, np.arange(n)])
+        dst = np.concatenate([dst, (np.arange(n) + 1) % n])
+    if symmetric:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    pairs = np.unique(np.stack([src, dst], axis=1), axis=0)
+    return pairs[:, 0], pairs[:, 1]
+
+
+def _store_for(tmp_path_factory, tag, src, dst, n):
+    base = tmp_path_factory.mktemp(tag)
+    write_edge_list(base / "el", [(src, dst)], num_vertices=n)
+    return preprocess_graph(str(base / "el"), str(base / "store"),
+                            threshold_edge_num=512, ell_max_width=128)
+
+
+NX_SEEDS = (0, 1)
+
+
+@needs_networkx
+@pytest.mark.parametrize("seed", NX_SEEDS)
+def test_pagerank_vs_networkx(tmp_path_factory, seed):
+    n = 160
+    src, dst = _random_digraph(seed, n, 5 * n)
+    store = _store_for(tmp_path_factory, f"nx_pr_{seed}", src, dst, n)
+    res = GraphSession(store).run("pagerank", max_iters=300)
+    assert res.converged
+    g = nx.DiGraph(list(zip(src.tolist(), dst.tolist())))
+    want = nx.pagerank(g, alpha=0.85, tol=1e-12, max_iter=1000)
+    np.testing.assert_allclose(res.values,
+                               [want[v] for v in range(n)], atol=1e-5)
+
+
+@needs_networkx
+@pytest.mark.parametrize("seed", NX_SEEDS)
+def test_sssp_bfs_vs_networkx(tmp_path_factory, seed):
+    n = 200
+    src, dst = _random_digraph(seed + 10, n, 3 * n)
+    store = _store_for(tmp_path_factory, f"nx_sp_{seed}", src, dst, n)
+    g = nx.DiGraph(list(zip(src.tolist(), dst.tolist())))
+    sess = GraphSession(store)
+    for app, source in (("sssp", 3), ("bfs", 17)):
+        res = sess.run(app, source=source, max_iters=n + 1)
+        assert res.converged
+        lengths = nx.single_source_shortest_path_length(g, source)
+        want = np.full(n, np.inf)
+        for v, d in lengths.items():
+            want[v] = d  # unreachable vertices stay +inf, as in the engine
+        np.testing.assert_array_equal(res.values, want)
+
+
+@needs_networkx
+@pytest.mark.parametrize("seed", NX_SEEDS)
+def test_cc_vs_networkx(tmp_path_factory, seed):
+    """On a SYMMETRIC graph the engine's directed min-label propagation is
+    exactly min-vertex-id per (weakly = strongly) connected component."""
+    n = 220
+    src, dst = _random_digraph(seed + 20, n, n, symmetric=True,
+                               ensure_out=False)
+    store = _store_for(tmp_path_factory, f"nx_cc_{seed}", src, dst, n)
+    res = GraphSession(store).run("cc", max_iters=2 * n)
+    assert res.converged
+    g = nx.Graph(list(zip(src.tolist(), dst.tolist())))
+    g.add_nodes_from(range(n))
+    want = np.empty(n)
+    for comp in nx.connected_components(g):
+        want[list(comp)] = min(comp)
+    np.testing.assert_array_equal(res.values, want)

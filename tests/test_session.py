@@ -73,15 +73,24 @@ def test_rerun_reuses_engine_and_jit_caches(graph_store):
 
 def test_engine_cache_is_lru_bounded(graph_store):
     """A long-lived session answering many distinct landmark sets must not
-    retain one jitted engine per set forever."""
+    retain one jitted engine per set forever.  Same-signature programs now
+    solve this outright (ONE engine serves every sssp source); programs
+    with genuinely different compiled steps stay LRU-bounded."""
     sess = GraphSession(graph_store, max_engines=2)
-    keep = sess.engine("sssp", source=0)
-    evicted = sess.engine("sssp", source=1)
-    assert sess.engine("sssp", source=0) is keep  # LRU bump
-    sess.engine("sssp", source=2)                 # evicts source=1
+    shared = sess.engine("sssp", source=0)
+    # every source shares one engine via jit_signature ("sssp",)...
+    assert sess.engine("sssp", source=1) is shared
+    # ...with the default program rebound to the latest request
+    assert shared.program.sources == (1,)
+    assert len(sess._engines) == 1
+    # distinct signatures (pagerank damping is baked into the jitted post)
+    # fill distinct slots, and the oldest is evicted at the bound
+    keep = sess.engine("pagerank")
+    evicted = sess.engine("pagerank", damping=0.5)  # evicts `shared` (LRU)
     assert len(sess._engines) == 2
-    assert sess.engine("sssp", source=0) is keep       # survivor kept identity
-    assert sess.engine("sssp", source=1) is not evicted  # rebuilt after evict
+    assert sess.engine("pagerank") is keep          # survivor kept identity
+    sess.engine("sssp", source=0)                   # evicts damping=0.5
+    assert sess.engine("pagerank", damping=0.5) is not evicted  # rebuilt
     with pytest.raises(ValueError, match="max_engines"):
         GraphSession(graph_store, max_engines=0)
 
@@ -101,10 +110,35 @@ def test_register_app_round_trip(graph_store):
     assert "frontier_walk" in available_apps()
     assert "_my_custom_factory" not in available_apps()
     assert isinstance(get_app("frontier_walk"), VertexProgram)
-    res = GraphSession(graph_store).run("frontier_walk", max_iters=5)
+    sess = GraphSession(graph_store)
+    res = sess.run("frontier_walk", max_iters=5)
     assert isinstance(res, RunResult)
+    # repeat dispatch must reuse the cached engine without tripping the
+    # jit-compatibility check (fresh factory instance each call; regression:
+    # custom apps with the inherited signature — or none at all — reran fine
+    # once and raised on the second run)
+    res2 = sess.run("frontier_walk", max_iters=5)
+    np.testing.assert_array_equal(res.values, res2.values)
+
+    @register_app("sigless_walk")
+    def _sigless_factory():
+        import dataclasses
+        return dataclasses.replace(apps.cc(), name="sigless_walk",
+                                   jit_signature=None)
+
+    for _ in range(2):  # name-keyed engines (no signature) rerun fine too
+        sess.run("sigless_walk", max_iters=3)
+    # tripwire: overriding a device callable while KEEPING the inherited
+    # jit_signature must raise, not silently run the old compiled post
+    import dataclasses
+    bad = dataclasses.replace(
+        apps.sssp(0), name="bad_walk",
+        post=lambda partial, old, n: partial + old)
+    with pytest.raises(ValueError, match="must also replace jit_signature"):
+        sess.run(bad, max_iters=3)
     # cleanup: keep the registry stable for other tests
     del apps._REGISTRY["frontier_walk"]
+    del apps._REGISTRY["sigless_walk"]
 
 
 def test_builtin_apps_registered():
