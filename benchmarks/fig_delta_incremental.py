@@ -1,0 +1,125 @@
+"""Mutable-graph overlay: incremental recompute, cache retention, memo survival.
+
+Three claims under measurement (ISSUE 6 acceptance), all on the shared
+scale-16 RMAT store wrapped in a ``DeltaGraphStore`` (mutations live in the
+overlay; the on-disk benchmark store is never modified):
+
+  1. After a small monotone delta, ``run_incremental`` (frontier seeded from
+     the commit's affected sources) beats a cold rerun on iterations AND disk
+     bytes while staying bitwise-identical to it.  Swept over delta sizes;
+     the cache is disabled for this leg so disk bytes are an honest per-run
+     measure.
+  2. Mutating edges confined to <= 10% of shards keeps >= 80% of the warm
+     compressed cache: only the dirty shards' entries are epoch-invalidated
+     (``stale_drops``), everything else is served from memory.
+  3. A serving memo survives ``GraphService.apply_mutations``: converged
+     results of incremental-capable apps are refreshed in place (one short
+     barrier), only non-incremental entries drop.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import get_store, row
+from repro.core import apps  # noqa: F401  (registers the standard programs)
+from repro.session import GraphSession
+
+DELTA_SIZES = (16, 256, 4096)
+MAX_ITERS = 64
+WARM_ITERS = 3
+
+
+def _fresh_edges(rng, n, count, lo=0, hi=None):
+    """``count`` random (src, dst) pairs with destinations in [lo, hi)."""
+    src = rng.integers(0, n, size=count, dtype=np.int64)
+    dst = rng.integers(lo, hi if hi is not None else n, size=count,
+                       dtype=np.int64)
+    keep = src != dst
+    return src[keep], dst[keep]
+
+
+def run() -> list[str]:
+    out = []
+    store = get_store()
+    n = int(store.properties["num_vertices"])
+    rng = np.random.default_rng(23)
+
+    # -- leg 1: incremental vs cold across delta sizes ----------------------
+    for m in DELTA_SIZES:
+        with GraphSession(store, mutable=True, cache_budget_bytes=0) as sess:
+            prev = sess.run("sssp", source=0, max_iters=MAX_ITERS)
+            sess.apply_mutations(inserts=_fresh_edges(rng, n, m))
+            t0 = time.perf_counter()
+            inc = sess.run_incremental("sssp", prev=prev, source=0,
+                                       max_iters=MAX_ITERS)
+            inc_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            cold = sess.run("sssp", source=0, max_iters=MAX_ITERS)
+            cold_s = time.perf_counter() - t0
+            assert np.array_equal(inc.values, cold.values), \
+                f"incremental sssp diverged from cold rerun at delta={m}"
+            inc_b = sum(h.disk_bytes for h in inc.history)
+            cold_b = sum(h.disk_bytes for h in cold.history)
+            out.append(row(
+                f"fig_delta_incremental_sssp_d{m}",
+                inc_s * 1e6,
+                f"cold_us={cold_s * 1e6:.1f};"
+                f"iters={inc.iterations}/{cold.iterations};"
+                f"disk_MB={inc_b / 1e6:.2f}/{cold_b / 1e6:.2f};"
+                f"byte_save={1 - inc_b / max(cold_b, 1):.2f};bitwise=1"))
+            assert inc.iterations <= cold.iterations
+            assert inc_b <= cold_b
+
+    # -- leg 2: cache retention under a confined delta ----------------------
+    S = store.total_shard_bytes()
+    with GraphSession(store, mutable=True,
+                      cache_budget_bytes=4 * S) as sess:
+        sess.run("pagerank", max_iters=WARM_ITERS)  # cold fill
+        sess.run("pagerank", max_iters=WARM_ITERS)  # settle promotions
+        rep0 = sess.cache_report()
+        iv = sess.store.intervals
+        # 64 edits, every destination inside shard 0's interval: exactly one
+        # of P shards goes dirty (<= 10% for the P >= 10 benchmark store)
+        sess.apply_mutations(inserts=_fresh_edges(
+            rng, n, 64, lo=int(iv[0]), hi=int(iv[1])))
+        dirty = len(sess.store.dirty_shards())
+        P = sess.store.num_shards
+        warm = sess.run("pagerank", max_iters=WARM_ITERS)
+        rep1 = sess.cache_report()
+        stale = rep1["stale_drops"] - rep0["stale_drops"]
+        refetched = rep1["misses"] - rep0["misses"]
+        retention = 1.0 - stale / max(rep0["cached_shards"], 1)
+        out.append(row(
+            "fig_delta_cache_retention",
+            warm.total_seconds * 1e6,
+            f"dirty_shards={dirty}/{P};stale_drops={stale};"
+            f"refetched={refetched};retention={retention:.2f};"
+            f"disk_MB={(rep1['disk_bytes'] - rep0['disk_bytes']) / 1e6:.2f}"))
+        assert dirty <= max(1, P // 10), f"delta not confined: {dirty}/{P}"
+        assert retention >= 0.8, f"cache retention {retention:.2f} < 0.8"
+
+    # -- leg 3: serving memo survives a mutation barrier --------------------
+    with GraphSession(store, mutable=True) as sess, \
+            sess.service(max_batch=4, max_wait_ms=1.0) as svc:
+        for s in range(8):
+            svc.submit("sssp", source=s).result()
+        svc.submit("pagerank", max_iters=10).result()
+        t0 = time.perf_counter()
+        rep = svc.apply_mutations(inserts=_fresh_edges(rng, n, 64))
+        barrier_s = time.perf_counter() - t0
+        snap0 = svc.stats.snapshot()
+        t0 = time.perf_counter()
+        svc.submit("sssp", source=3).result()  # must hit the refreshed memo
+        hit_s = time.perf_counter() - t0
+        hits = svc.stats.snapshot()["memo_hits"] - snap0["memo_hits"]
+        out.append(row(
+            "fig_delta_memo_survival",
+            barrier_s * 1e6,
+            f"epoch={rep.epoch};refreshed={rep.memo_refreshed};"
+            f"dropped={rep.memo_dropped};post_hit_us={hit_s * 1e6:.1f};"
+            f"post_hits={hits}"))
+        assert rep.memo_refreshed == 8 and rep.memo_dropped == 1
+        assert hits == 1, "refreshed memo entry did not serve the query"
+    return out

@@ -31,6 +31,12 @@ _EXPORTS = {
     "ShardPipeline": ("repro.core.pipeline", "ShardPipeline"),
     "ShardSource": ("repro.graph.source", "ShardSource"),
     "MissingGraphError": ("repro.graph.source", "MissingGraphError"),
+    "ConcurrentMutationError": ("repro.graph.source",
+                                "ConcurrentMutationError"),
+    "DeltaGraphStore": ("repro.graph.delta", "DeltaGraphStore"),
+    "DeltaBudgetError": ("repro.graph.delta", "DeltaBudgetError"),
+    "compact": ("repro.graph.compact", "compact"),
+    "CompactionReport": ("repro.graph.compact", "CompactionReport"),
     "GraphStore": ("repro.graph.storage", "GraphStore"),
     "PackedGraphStore": ("repro.graph.packed", "PackedGraphStore"),
     "MemoryGraphStore": ("repro.graph.memory", "MemoryGraphStore"),

@@ -23,9 +23,12 @@ Array = jnp.ndarray
 # get_app()/available_apps(); APPS below is the same dict kept as a
 # backward-compatible alias.
 _REGISTRY: dict[str, Callable[..., "VertexProgram"]] = {}
+# names whose fixpoints survive monotone graph growth (see is_incremental)
+_INCREMENTAL: set[str] = set()
 
 
-def register_app(name_or_factory=None, *, name: str | None = None):
+def register_app(name_or_factory=None, *, name: str | None = None,
+                 incremental: bool = False):
     """Register a VertexProgram factory under a name.
 
     Usable bare (``@register_app``, name taken from the function) or with an
@@ -42,17 +45,34 @@ def register_app(name_or_factory=None, *, name: str | None = None):
     also shows up in ``available_apps()`` and works with ``run_many``.
     Factories returning a ``BatchedVertexProgram`` are dispatched the same
     way through ``GraphSession.run_batch``.
+
+    ``incremental=True`` declares the app safe for incremental recompute
+    after a *monotone* delta (insert-only / weight-non-increasing): its
+    update is a min-propagation whose previous fixpoint stays a valid upper
+    bound, so ``session.run_incremental`` may seed from it instead of
+    rerunning cold.  Apps whose values can move in either direction
+    (PageRank) must leave it False — they always fall back to a full run.
     """
     if isinstance(name_or_factory, str):
         name = name_or_factory
 
     def deco(factory):
-        _REGISTRY[name or factory.__name__] = factory
+        final = name or factory.__name__
+        _REGISTRY[final] = factory
+        if incremental:
+            _INCREMENTAL.add(final)
+        else:
+            _INCREMENTAL.discard(final)  # an overwrite drops the old claim
         return factory
 
     if callable(name_or_factory):
         return deco(name_or_factory)
     return deco
+
+
+def is_incremental(name: str) -> bool:
+    """True iff ``name`` was registered with ``incremental=True``."""
+    return name in _INCREMENTAL
 
 
 def get_app(name: str, **kwargs) -> "VertexProgram":
@@ -134,7 +154,7 @@ def pagerank(damping: float = 0.85, tol: float = 1e-6) -> VertexProgram:
 _INF = np.float32(np.inf)
 
 
-@register_app
+@register_app(incremental=True)
 def sssp(source: int = 0) -> VertexProgram:
     def init(n, in_deg, out_deg):
         v = np.full(n, _INF, dtype=np.float32)
@@ -157,14 +177,14 @@ def sssp(source: int = 0) -> VertexProgram:
     )
 
 
-@register_app
+@register_app(incremental=True)
 def bfs(source: int = 0) -> VertexProgram:
     """Hop distance = SSSP with unit edge weights (vals are 1.0 in ELL)."""
     p = sssp(source)
     return dataclasses.replace(p, name="bfs")
 
 
-@register_app
+@register_app(incremental=True)
 def cc() -> VertexProgram:
     def init(n, in_deg, out_deg):
         v = np.arange(n, dtype=np.float32)  # subgraph id := vertex id (Alg 3 l.29)

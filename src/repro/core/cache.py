@@ -122,6 +122,7 @@ class CacheStats:
     promotions: int = 0
     demotions: int = 0
     decode_seconds_saved: float = 0.0
+    stale_drops: int = 0  # entries dropped because their shard's epoch moved
 
     def __post_init__(self):
         self._lock = threading.Lock()
@@ -203,6 +204,10 @@ class CompressedShardCache:
         self._cold_bytes = 0
         self._freq: dict[int, int] = {}
         self._decode_cost: dict[int, float] = {}
+        # epoch each resident entry was cached at: a mutable store bumps a
+        # shard's epoch on commit, and `get` lazily drops ONLY that shard's
+        # entry (clean shards keep their hot/cold placement across mutations)
+        self._epoch_of: dict[int, int] = {}
         self._lock = threading.RLock()  # prefetch thread(s) + main loop
         self._compress, self._decompress = (
             _make_codec(self.mode) if self.mode in ZSTD_LEVEL
@@ -341,6 +346,47 @@ class CompressedShardCache:
             self._enforce()
         return shard
 
+    # -- epoch-grained invalidation (mutable stores) ---------------------
+    def _store_shard_epoch(self, shard_id: int) -> int:
+        fn = getattr(self.store, "shard_epoch", None)
+        return int(fn(shard_id)) if fn is not None else 0
+
+    def _invalidate_locked(self, shard_id: int) -> bool:
+        dropped = False
+        entry = self._hot.pop(shard_id, None)
+        if entry is not None:
+            self._hot_bytes -= self._entry_nbytes(entry)
+            dropped = True
+        blob = self._cold.pop(shard_id, None)
+        if blob is not None:
+            self._cold_bytes -= len(blob)
+            dropped = True
+        entry = self._lru.pop(shard_id, None)
+        if entry is not None:
+            self._bytes -= self._entry_nbytes(entry)
+            dropped = True
+        if dropped:
+            # not an `eviction` (those mean budget pressure): a stale drop
+            self.stats.bump(stale_drops=1)
+        return dropped
+
+    def invalidate(self, shard_ids=None) -> int:
+        """Eagerly drop the entries of ``shard_ids`` (default: every shard
+        whose epoch moved since it was cached); returns the drop count.
+        ``get`` does this lazily per shard, so calling this is optional."""
+        with self._lock:
+            if shard_ids is None:
+                resident = set(self._hot) | set(self._cold) | set(self._lru)
+                shard_ids = [p for p in resident
+                             if self._store_shard_epoch(p)
+                             != self._epoch_of.get(p, 0)]
+            dropped = 0
+            for p in shard_ids:
+                if self._invalidate_locked(p):
+                    dropped += 1
+                self._epoch_of.pop(p, None)
+            return dropped
+
     # -- the one public entry point -------------------------------------
     def get(self, shard_id: int) -> ELLShard:
         """Return a decoded shard, through whatever tier currently holds it.
@@ -350,6 +396,10 @@ class CompressedShardCache:
         ``hot_bytes <= hot_fraction * budget``) holds on return.
         """
         with self._lock:
+            cur = self._store_shard_epoch(shard_id)
+            if cur != self._epoch_of.get(shard_id, 0):
+                self._invalidate_locked(shard_id)
+                self._epoch_of[shard_id] = cur
             if self.adaptive:
                 return self._get_adaptive(shard_id)
             if self.mode == 0:
@@ -406,6 +456,7 @@ class CompressedShardCache:
             self._hot_bytes = 0
             self._cold_bytes = 0
             self._freq.clear()
+            self._epoch_of.clear()
 
     def audit(self) -> int:
         """Recount both tiers from scratch and assert the running byte
@@ -461,6 +512,7 @@ class CompressedShardCache:
                 "promotions": s.promotions,
                 "demotions": s.demotions,
                 "evictions": s.evictions,
+                "stale_drops": s.stale_drops,
                 "disk_bytes": s.disk_bytes,
                 "decompress_seconds": s.decompress_seconds,
                 "compress_seconds": s.compress_seconds,

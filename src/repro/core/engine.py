@@ -44,10 +44,16 @@ from repro.core.apps import BatchedVertexProgram, VertexProgram
 from repro.core.cache import CompressedShardCache
 from repro.core.pipeline import ShardPipeline
 from repro.core.shards import ELLShard
-from repro.graph.source import ShardSource
+from repro.graph.source import ConcurrentMutationError, ShardSource
 from repro.kernels.spmv.ops import ell_spmv, ell_spmv_batch
 
 _VALID_CACHE_MODES = (0, 1, 2, 3, 4)
+
+
+def _store_epoch(store) -> int:
+    """Graph epoch of a store; frozen backends (no ``epoch``) sit at 0."""
+    fn = getattr(store, "epoch", None)
+    return int(fn()) if callable(fn) else 0
 
 
 def _env(name: str, default, cast):
@@ -219,6 +225,10 @@ class RunResult:
     iterations: int
     history: list[IterationStats]
     converged: bool
+    # graph epoch pinned at run start (0 = frozen store) and program tag —
+    # what session.run_incremental validates a `prev` result against
+    epoch: int = 0
+    tag: str | None = None
 
     @property
     def total_seconds(self) -> float:
@@ -278,7 +288,8 @@ class BatchRunResult(RunResult):
         pre = self.history[0].iteration if self.history else 0
         return RunResult(values=self.values[:, k], iterations=iters,
                          history=self.history[: max(0, iters - pre)],
-                         converged=bool(self.column_converged[k]))
+                         converged=bool(self.column_converged[k]),
+                         epoch=self.epoch)
 
     def columns(self) -> list[RunResult]:
         return [self.column(k) for k in range(self.num_columns)]
@@ -312,6 +323,7 @@ class VSWEngine:
         blooms: list | None = None,
         out_deg_dev: jnp.ndarray | None = None,
         n_pad: int | None = None,
+        graph_epoch: int | None = None,
         **legacy,
     ):
         if config is not None and not isinstance(config, EngineConfig):
@@ -341,6 +353,13 @@ class VSWEngine:
         self.use_pallas = self.config.use_pallas
         self.preload = self.config.preload
         self.n = store.num_vertices
+        # graph epoch the degree/bloom/meta arrays below were read at; a
+        # mutable store moving past it triggers _sync_graph_state per run
+        if graph_epoch is not None:
+            self._graph_epoch = int(graph_epoch)
+        else:
+            self._graph_epoch = _store_epoch(store) if vertex_info is None else 0
+        self._sync_lock = threading.Lock()
         self.in_deg, self.out_deg = (vertex_info if vertex_info is not None
                                      else store.read_vertex_info())
         self.blooms = blooms if blooms is not None else store.read_all_blooms()
@@ -383,6 +402,7 @@ class VSWEngine:
             blooms=session.blooms,
             out_deg_dev=session.out_deg_dev,
             n_pad=session.n_pad,
+            graph_epoch=getattr(session, "_graph_epoch", None),
         )
 
     # ------------------------------------------------------------------
@@ -390,9 +410,12 @@ class VSWEngine:
         program, n = self.program, self.n
         semiring, use_pallas = self.program.semiring, self.use_pallas
 
+        # out-degrees arrive as a RUNTIME argument, never a closure constant:
+        # a jit closure would bake the degree array at trace time and
+        # silently keep serving stale degrees after a graph mutation
         @jax.jit
-        def gather_fn(values):
-            return program.gather_transform(values, self._out_deg_dev)
+        def gather_fn(values, out_deg):
+            return program.gather_transform(values, out_deg)
 
         if self.batched:
             # [n_pad, K] value matrix: one edge sweep advances K frontiers.
@@ -481,6 +504,40 @@ class VSWEngine:
             return self._preloaded[p]
         return self.cache.get(p)
 
+    def _sync_graph_state(self) -> None:
+        """Refresh graph-derived engine state after a store mutation.
+
+        Cheap no-op while the store's epoch matches the one the current
+        degree/bloom/shard-meta arrays were read at.  On an epoch change:
+        re-read vertex info, rebuild the device out-degree array, recompute
+        shard nnz/rows (``n_pad`` only ever grows, so jitted shapes stay
+        stable when possible), and re-read Blooms — but ONLY for shards
+        whose own epoch moved (the session shares one blooms list across
+        engines; refreshing it in place keeps every engine consistent).
+        """
+        if _store_epoch(self.store) == self._graph_epoch:
+            return
+        with self._sync_lock:
+            cur = _store_epoch(self.store)
+            prev = self._graph_epoch
+            if cur == prev:
+                return
+            self.in_deg, self.out_deg = self.store.read_vertex_info()
+            shard_meta = self.store.properties["shards"]
+            self._shard_nnz = [int(m.get("nnz", 0)) for m in shard_meta]
+            self.max_rows = max((m["rows"] for m in shard_meta), default=8)
+            self.n_pad = max(self.n_pad, self.n + self.max_rows)
+            self._out_deg_dev = jnp.asarray(
+                np.pad(self.out_deg,
+                       (0, self.n_pad - self.n)).astype(np.float32))
+            shard_epoch = getattr(self.store, "shard_epoch", None)
+            for p in range(self.P):
+                if shard_epoch is None or shard_epoch(p) > prev:
+                    self.blooms[p] = self.store.read_bloom(p)
+                    if p in self._preloaded:
+                        self._preloaded[p] = self.cache.get(p)
+            self._graph_epoch = cur
+
     @staticmethod
     def _materialize(arr: np.ndarray) -> np.ndarray:
         """Read-only arrays are mmap-backed views (packed backend): copy them
@@ -514,6 +571,7 @@ class VSWEngine:
         checkpoint_every: int = 0,
         resume: bool = False,
         program: VertexProgram | None = None,
+        init_state: tuple[np.ndarray, np.ndarray] | None = None,
     ) -> Iterator[IterationStats]:
         """Generator form of ``run``: yields an IterationStats after every
         iteration (live monitoring), returns the RunResult on exhaustion
@@ -525,9 +583,46 @@ class VSWEngine:
         shard steps while ``init``/``sources``/checkpoint tags come from the
         substitute.  This is how one engine answers e.g. SSSP from any
         source without recompiling — no engine state is mutated, so distinct
-        runs with distinct programs can share the instance."""
+        runs with distinct programs can share the instance.
+
+        ``init_state`` replaces ``program.init`` with explicit
+        ``(values, active_mask)`` arrays — how incremental recompute seeds
+        the frontier from a previous result's fixpoint.  Mutually exclusive
+        with ``resume``.
+
+        The run **pins the store's graph epoch at start**: every shard fetch
+        asserts the shard has not moved past it, and a concurrent
+        ``apply()`` therefore raises ``ConcurrentMutationError`` instead of
+        mixing epochs into one result."""
         program = self._check_program(program)
-        values, active_mask = program.init(self.n, self.in_deg, self.out_deg)
+        self._sync_graph_state()
+        run_epoch = self._graph_epoch
+        shard_epoch_fn = getattr(self.store, "shard_epoch", None)
+        epoch_check = None
+        if shard_epoch_fn is not None:
+            def epoch_check(p, _fn=shard_epoch_fn, _pin=run_epoch):
+                got = _fn(p)
+                if got > _pin:
+                    raise ConcurrentMutationError(
+                        f"shard {p} is at epoch {got}, newer than the epoch "
+                        f"{_pin} this run pinned at start — the graph was "
+                        "mutated mid-run (drain runs before apply(), e.g. "
+                        "via GraphService.apply_mutations)")
+        if init_state is not None:
+            if resume:
+                raise ValueError("init_state and resume are mutually "
+                                 "exclusive ways to seed a run")
+            values, active_mask = init_state
+            values = np.asarray(values)
+            active_mask = np.asarray(active_mask, dtype=bool)
+            if values.shape[0] != self.n or active_mask.shape != values.shape:
+                raise ValueError(
+                    f"init_state arrays must both be [{self.n}, ...] with "
+                    f"matching shapes, got {values.shape} / "
+                    f"{active_mask.shape}")
+        else:
+            values, active_mask = program.init(self.n, self.in_deg,
+                                               self.out_deg)
         start_iter = 0
         ck_col_iters = None
         if resume and checkpoint_dir:
@@ -592,10 +687,11 @@ class VSWEngine:
             if self.batched:
                 # bill this sweep only to columns still holding a frontier
                 col_iters += col_live
-            x = self._gather_fn(src)
+            x = self._gather_fn(src, self._out_deg_dev)
             dst = src  # donated into shard steps; untouched intervals keep old values
             dst = dst + 0.0  # materialize a copy so src survives for `changed`
-            for _p, shard, dev in self._pipeline.stream(schedule):
+            for _p, shard, dev in self._pipeline.stream(schedule,
+                                                        check=epoch_check):
                 cols_dev, vals_dev, row_map_dev = dev
                 tail = (cols_dev, vals_dev, row_map_dev, shard.start_vertex,
                         shard.end_vertex - shard.start_vertex)
@@ -653,11 +749,13 @@ class VSWEngine:
             # implies no column can ever update again
             result: RunResult = BatchRunResult(
                 values=final, iterations=len(history), history=history,
-                converged=converged, column_iterations=col_iters,
+                converged=converged, epoch=run_epoch,
+                tag=self._tag_for(program), column_iterations=col_iters,
                 column_converged=np.asarray(~col_live | converged))
         else:
             result = RunResult(values=final, iterations=len(history),
-                               history=history, converged=converged)
+                               history=history, converged=converged,
+                               epoch=run_epoch, tag=self._tag_for(program))
         self.last_result = result
         return result
 
@@ -668,6 +766,7 @@ class VSWEngine:
         checkpoint_every: int = 0,
         resume: bool = False,
         program: VertexProgram | None = None,
+        init_state: tuple[np.ndarray, np.ndarray] | None = None,
     ) -> RunResult:
         # the lock serializes whole runs, so concurrent callers sharing one
         # engine (GraphService runner threads) see coherent per-iteration
@@ -677,7 +776,8 @@ class VSWEngine:
             gen = self.iter_run(max_iters=max_iters,
                                 checkpoint_dir=checkpoint_dir,
                                 checkpoint_every=checkpoint_every,
-                                resume=resume, program=program)
+                                resume=resume, program=program,
+                                init_state=init_state)
             while True:
                 try:
                     next(gen)

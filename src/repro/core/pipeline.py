@@ -101,8 +101,11 @@ class ShardPipeline:
             self.stats.staged_peak_bytes = max(self.stats.staged_peak_bytes,
                                                self.stats.staged_bytes)
 
-    def _produce(self, p: int) -> tuple[int, ELLShard, Any, int]:
+    def _produce(self, p: int,
+                 check: Callable[[int], None] | None) -> tuple[int, ELLShard, Any, int]:
         t0 = time.perf_counter()
+        if check is not None:
+            check(p)  # epoch pin: refuse to stage a shard from a newer epoch
         shard = self.fetch(p)
         staged = self.stage(shard) if self.stage is not None else None
         held = self.nbytes(shard) if self.nbytes is not None else 0
@@ -110,14 +113,22 @@ class ShardPipeline:
         self.stats.fetch_seconds += time.perf_counter() - t0
         return p, shard, staged, held
 
-    def stream(self, schedule: Sequence[int]) -> Iterator[tuple[int, ELLShard, Any]]:
-        """Yield every shard of ``schedule`` in order, prefetching ahead."""
+    def stream(self, schedule: Sequence[int],
+               check: Callable[[int], None] | None = None,
+               ) -> Iterator[tuple[int, ELLShard, Any]]:
+        """Yield every shard of ``schedule`` in order, prefetching ahead.
+
+        ``check`` (optional) runs on the producer immediately before each
+        fetch; the engine passes its epoch-pin assertion so a mid-run graph
+        mutation raises ``ConcurrentMutationError`` instead of silently
+        staging a shard from a newer epoch into an older run.
+        """
         # a single-shard schedule has nothing to overlap with — skip the
         # worker thread (same order, same accounting, no spawn cost)
         if self.depth == 0 or len(schedule) < 2:
             for p in schedule:
                 t0 = time.perf_counter()
-                pid, shard, staged, held = self._produce(p)
+                pid, shard, staged, held = self._produce(p, check)
                 # synchronous path: the consumer IS stalled for the whole fetch
                 self.stats.stall_seconds += time.perf_counter() - t0
                 self.stats.shards += 1
@@ -133,7 +144,7 @@ class ShardPipeline:
                 for p in schedule:
                     if cancel.is_set():
                         return
-                    q.put(self._produce(p))
+                    q.put(self._produce(p, check))
                 q.put(_DONE)
             except BaseException as exc:  # noqa: BLE001 — forwarded, re-raised
                 q.put(_Failure(exc))

@@ -1,7 +1,9 @@
 from repro.graph.generate import rmat_edges, uniform_edges, zipf_edges  # noqa: F401
-from repro.graph.source import (BytesCounter, MissingGraphError,  # noqa: F401
-                                ShardSource)
+from repro.graph.source import (BytesCounter, ConcurrentMutationError,  # noqa: F401
+                                MissingGraphError, ShardSource, graph_token)
 from repro.graph.storage import GraphStore  # noqa: F401
 from repro.graph.packed import PackedGraphStore, pack_graph  # noqa: F401
 from repro.graph.memory import MemoryGraphStore  # noqa: F401
 from repro.graph.preprocess import preprocess_graph  # noqa: F401
+from repro.graph.delta import DeltaBudgetError, DeltaGraphStore  # noqa: F401
+from repro.graph.compact import CompactionReport, compact  # noqa: F401

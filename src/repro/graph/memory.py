@@ -92,3 +92,18 @@ class MemoryGraphStore(ShardSourceBase):
         bloom = self._blooms[shard_id]
         self.io.add_read(bloom.nbytes())
         return bloom
+
+    def _apply_compaction(self, shards: dict[int, ELLShard],
+                          blooms: dict[int, BloomFilter],
+                          nbytes: dict[int, int],
+                          vertex_info: tuple[np.ndarray, np.ndarray],
+                          properties: dict) -> None:
+        """Absorb a DeltaGraphStore overlay (repro.graph.compact): swap in
+        the merged views of the dirty shards and the updated graph-level
+        state.  Clean shards keep their identity (views stay valid)."""
+        for p, shard in shards.items():
+            self._shards[p] = _materialized(shard)
+            self._blooms[p] = blooms[p]
+            self._nbytes[p] = int(nbytes[p])
+        self._vertex_info = vertex_info
+        self._prop = validate_properties(dict(properties), "MemoryGraphStore")

@@ -156,6 +156,7 @@ class PackedGraphStore(ShardSourceBase):
                 ) from exc
             self._mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
         self._header = header
+        self._retired: list[mmap.mmap] = []
         self._prop = validate_properties(dict(header["properties"]),
                                          repr(str(self.path)))
 
@@ -212,5 +213,29 @@ class PackedGraphStore(ShardSourceBase):
         return BloomFilter(bits=bits, num_bits=int(rec["num_bits"]),
                            num_hashes=int(rec["num_hashes"]))
 
+    def remap(self) -> None:
+        """Re-read the preamble/header and re-mmap the file after an in-place
+        append (dirty-shard compaction).  The previous mapping is *retired*,
+        not closed: shard views handed out before the remap may still alias
+        its pages, and those stay valid because old segments are never
+        overwritten — compaction only appends and repoints the header."""
+        with open(self.path, "rb") as f:
+            f.seek(len(MAGIC))
+            hdr_off = int.from_bytes(f.read(8), "little")
+            hdr_len = int.from_bytes(f.read(8), "little")
+            f.seek(hdr_off)
+            header = json.loads(f.read(hdr_len))
+            mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+        self._retired.append(self._mm)
+        self._mm = mm
+        self._header = header
+        self._prop = validate_properties(dict(header["properties"]),
+                                         repr(str(self.path)))
+
     def close(self) -> None:
+        for mm in self._retired:
+            try:
+                mm.close()
+            except BufferError:  # a live view still pins it; main close decides
+                pass
         self._mm.close()

@@ -115,6 +115,7 @@ def preprocess_graph(
             "weighted": weighted,
             "threshold_edge_num": int(threshold_edge_num),
             "ell_max_width": int(ell_max_width),
+            "lane": int(lane),  # DeltaGraphStore re-lays dirty shards with it
             "shards": shard_meta,
             "preprocess_seconds": time.time() - t0,
         }

@@ -32,6 +32,13 @@ class MissingGraphError(FileNotFoundError):
     """Raised when a path is not a preprocessed graph (no/invalid property.json)."""
 
 
+class ConcurrentMutationError(RuntimeError):
+    """Raised when a run observes a graph epoch newer than the one it pinned
+    at start — i.e. the store was mutated mid-run without draining the run
+    first (``GraphService.apply_mutations`` drains; direct ``apply`` calls
+    against a store with live runs do not)."""
+
+
 _REQUIRED_PROPERTIES = ("num_vertices", "num_edges", "num_shards",
                         "intervals", "shards")
 
@@ -155,6 +162,8 @@ class ShardSource(Protocol):
     def read_shard_bytes(self, shard_id: int) -> bytes: ...
     def shard_nbytes(self, shard_id: int) -> int: ...
     def read_bloom(self, shard_id: int) -> BloomFilter: ...
+    def epoch(self) -> int: ...
+    def shard_epoch(self, shard_id: int) -> int: ...
 
 
 class ShardSourceBase:
@@ -196,3 +205,52 @@ class ShardSourceBase:
 
     def read_all_blooms(self) -> list[BloomFilter]:
         return [self.read_bloom(p) for p in self.shard_ids()]
+
+    # -- mutability surface (frozen stores sit forever at epoch 0) ----------
+    def epoch(self) -> int:
+        """Monotonic commit counter; 0 means the graph has never mutated."""
+        return 0
+
+    def shard_epoch(self, shard_id: int) -> int:
+        """Epoch at which this shard's content last changed (0 = pristine)."""
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# graph identity / staleness — one code path for the serve memo layer and the
+# session's auto-repack check
+# ---------------------------------------------------------------------------
+def path_mtime_ns(path) -> int:
+    """mtime of ``path`` in ns, or -1 when it does not exist."""
+    import os
+
+    try:
+        return os.stat(str(path)).st_mtime_ns
+    except OSError:
+        return -1
+
+
+def graph_token(store) -> tuple:
+    """A hashable token that changes iff the graph content may have changed.
+
+    Mutable stores version themselves with :meth:`ShardSource.epoch`; frozen
+    on-disk stores fall back to the mtime of the backing file
+    (``property.json`` for directories), preserving the pre-epoch behavior.
+    Stores with neither identity get an object-identity token.
+    """
+    epoch_fn = getattr(store, "epoch", None)
+    epoch = int(epoch_fn()) if callable(epoch_fn) else 0
+    path = getattr(store, "path", None)
+    ident = str(path) if path is not None else f"<store:{id(store)}>"
+    if epoch > 0:
+        return (ident, "epoch", epoch)
+    if path is not None:
+        import os
+
+        probe = str(path)
+        if os.path.isdir(probe):
+            probe = os.path.join(probe, "property.json")
+        mtime = path_mtime_ns(probe)
+        if mtime >= 0:
+            return (ident, "mtime", mtime)
+    return ("unversioned", id(store))

@@ -23,8 +23,11 @@ independent client requests into those K-column sweeps:
   source sets never recompiles.
 * Non-batchable apps (global pagerank, cc) coalesce by exact identity:
   duplicate in-flight requests share a single engine run.
-* A small memo layer keyed on (app, params, graph mtime) serves repeated
-  hot queries (popular PPR seeds) without any sweep at all.
+* A small memo layer keyed on (app, params, graph token — the store's
+  epoch for mutable graphs, mtime for frozen ones) serves repeated hot
+  queries (popular PPR seeds) without any sweep at all.
+  ``apply_mutations`` commits edge edits between sweeps (pause + drain),
+  then refreshes incremental-capable memo entries under the new epoch.
 
 Batch padding: groups are padded up to the next power of two (duplicating
 the last source) so the jitted [n, K] shard steps specialize on
@@ -45,15 +48,24 @@ import time
 from collections import Counter, OrderedDict, deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from math import ceil
-from pathlib import Path
 
 import numpy as np
 
-from repro.core.apps import available_apps, batch_spec
+from repro.core.apps import available_apps, batch_spec, is_incremental
+from repro.graph.source import graph_token
 
 
 class ServiceClosed(RuntimeError):
     """submit() after close(): the service no longer accepts work."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MutationReport:
+    """What ``GraphService.apply_mutations`` did to the serving state."""
+
+    epoch: int           # graph epoch after the commit
+    memo_refreshed: int  # memo entries recomputed incrementally and re-keyed
+    memo_dropped: int    # memo entries invalidated outright
 
 
 class AdmissionError(RuntimeError):
@@ -86,7 +98,7 @@ class ServiceConfig:
         Per-app admission allowlist; None serves every registered app plus
         the batch-only names ("ppr").
     memoize / memo_capacity / memo_budget_bytes:
-        Result memoization keyed on (app, params, graph mtime): repeated hot
+        Result memoization keyed on (app, params, graph token): repeated hot
         queries skip the sweep entirely.  LRU-bounded at ``memo_capacity``
         entries AND ``memo_budget_bytes`` of result values (each entry holds
         a full length-n vector, so the byte bound is the one that matters on
@@ -306,6 +318,11 @@ class GraphService:
         self._pending_counts: Counter = Counter()
         self._closing = False
         self._closed = False
+        # mutation barrier: while True the dispatcher launches no new
+        # batches (apply_mutations also holds every inflight permit, so the
+        # graph only changes between sweeps, never under one)
+        self._paused = False
+        self._mutate_lock = threading.Lock()  # serializes apply_mutations
         self._memo: OrderedDict = OrderedDict()  # key -> (result, nbytes)
         self._memo_bytes = 0
         self._graph_token = self._compute_graph_token(session.store)
@@ -319,17 +336,11 @@ class GraphService:
     # ------------------------------------------------------------------
     @staticmethod
     def _compute_graph_token(store) -> tuple:
-        """Identity of the graph snapshot for memo keys: a re-preprocessed
-        (or re-packed) graph at the same path must not serve stale results."""
-        path = getattr(store, "path", None)
-        if isinstance(path, (str, Path)):
-            p = Path(str(path))
-            probe = p / "property.json" if p.is_dir() else p
-            try:
-                return (str(p), probe.stat().st_mtime_ns)
-            except OSError:
-                pass
-        return ("unversioned", id(store))
+        """Identity of the graph snapshot for memo keys: a mutated, re-packed
+        or re-preprocessed graph at the same path must not serve stale
+        results.  Mutable stores version themselves with their epoch; frozen
+        stores keep the historical mtime probe (see ``graph_token``)."""
+        return graph_token(store)
 
     def _served_apps(self) -> tuple:
         if self.config.apps is not None:
@@ -409,7 +420,10 @@ class GraphService:
         cfg = self.config
         while True:
             with self._cond:
-                while not self._pending and not self._closing:
+                # a mutation barrier (_paused) parks the dispatcher even
+                # while closing — apply_mutations always lifts it in finally
+                while self._paused or (not self._closing
+                                       and not self._pending):
                     self._cond.wait()
                 if not self._pending:
                     return  # closing and drained
@@ -545,6 +559,103 @@ class GraphService:
                         or self._memo_bytes > self.config.memo_budget_bytes:
                     _, (_, dropped) = self._memo.popitem(last=False)
                     self._memo_bytes -= dropped
+
+    # ------------------------------------------------------------------
+    def apply_mutations(self, inserts=None, deletes=None, updates=None, *,
+                        refresh_memo: bool = True) -> MutationReport:
+        """Commit edge mutations against the shared session, safely.
+
+        Pauses dispatch, drains every in-flight sweep (by taking all
+        ``max_inflight`` permits), commits through
+        ``session.apply_mutations`` (the session must be ``mutable=True``),
+        re-keys the memo under the new graph token, then resumes.  Pending
+        requests admitted before the call simply execute after it, at the
+        new epoch; in-flight sweeps finish at the old epoch before the
+        commit lands, so no sweep ever mixes epochs.
+
+        ``refresh_memo=True`` recomputes memoized results whose application
+        is registered ``incremental=True`` via ``session.run_incremental``
+        — for monotone deltas that costs the few frontier-local iterations
+        the change propagates, per entry, instead of a cold sweep — and
+        re-inserts them under the new token.  Everything else (PageRank
+        entries, results predating the epoch log) is dropped and will be
+        recomputed on next request.
+        """
+        with self._mutate_lock:
+            with self._cond:
+                if self._closing:
+                    raise ServiceClosed("GraphService is closed")
+                self._paused = True
+            acquired = 0
+            try:
+                for _ in range(self.config.max_inflight):
+                    self._inflight.acquire()
+                    acquired += 1
+                epoch = self.session.apply_mutations(
+                    inserts=inserts, deletes=deletes, updates=updates)
+                with self._cond:
+                    stale = list(self._memo.items())
+                    self._memo.clear()
+                    self._memo_bytes = 0
+                    self._graph_token = self._compute_graph_token(
+                        self.session.store)
+                    token = self._graph_token
+                refreshed = []
+                dropped = 0
+                for (app, source, pkey, _old), (res, _nb) in stale:
+                    new = (self._refresh_memo_entry(app, source, pkey, res)
+                           if refresh_memo else None)
+                    if new is None:
+                        dropped += 1
+                    else:
+                        refreshed.append(((app, source, pkey, token), new))
+                if refreshed:
+                    with self._cond:
+                        for key, res in refreshed:
+                            nbytes = getattr(res.values, "nbytes", 0)
+                            if nbytes > self.config.memo_budget_bytes:
+                                continue
+                            self._memo[key] = (res, nbytes)
+                            self._memo_bytes += nbytes
+                        while len(self._memo) > self.config.memo_capacity \
+                                or self._memo_bytes \
+                                > self.config.memo_budget_bytes:
+                            _, (_, nb) = self._memo.popitem(last=False)
+                            self._memo_bytes -= nb
+                return MutationReport(epoch=epoch,
+                                      memo_refreshed=len(refreshed),
+                                      memo_dropped=dropped)
+            finally:
+                for _ in range(acquired):
+                    self._inflight.release()
+                with self._cond:
+                    self._paused = False
+                    self._cond.notify_all()
+
+    def _refresh_memo_entry(self, app, source, pkey, prev):
+        """Incrementally recompute one memo entry, or None to drop it.
+
+        Only entries where ``run_incremental`` is guaranteed to take its
+        seeded shortcut are refreshed — a fallback cold sweep per entry
+        would turn one mutation into a full-memo recompute storm."""
+        if not (is_incremental(app) and prev.converged):
+            return None
+        store = self.session.store
+        monotone_since = getattr(store, "monotone_since", None)
+        if monotone_since is None or not monotone_since(prev.epoch):
+            return None
+        if store.affected_sources_since(prev.epoch) is None:
+            return None  # epoch log truncated past prev: would run cold
+        params = dict(pkey)
+        max_iters = params.pop("max_iters", self.config.max_iters)
+        spec = batch_spec(app)
+        if source is not None and spec is not None:
+            params[spec.source_param] = source
+        try:
+            return self.session.run_incremental(app, prev=prev,
+                                                max_iters=max_iters, **params)
+        except Exception:
+            return None  # a broken refresh drops the entry, never the commit
 
     # ------------------------------------------------------------------
     def warmup(self, apps=("sssp",)) -> None:

@@ -65,11 +65,12 @@ import numpy as np
 
 from pathlib import Path
 
-from repro.core.apps import BatchedVertexProgram, VertexProgram, get_app
+from repro.core.apps import (BatchedVertexProgram, VertexProgram, get_app,
+                             is_incremental)
 from repro.core.cache import CompressedShardCache
 from repro.core.engine import (BatchRunResult, EngineConfig, IterationStats,
-                               RunResult, VSWEngine)
-from repro.graph.source import ShardSource
+                               RunResult, VSWEngine, _store_epoch)
+from repro.graph.source import ShardSource, path_mtime_ns
 from repro.graph.storage import GraphStore
 
 BACKENDS = ("npz", "packed", "memory")
@@ -102,9 +103,8 @@ def _resolve_source(store, backend: str | None):
             # is written last by preprocess_graph, so its mtime dates the store
             packed = path / DEFAULT_PACKED_NAME
             prop = path / "property.json"
-            if not packed.is_file() or (
-                    prop.is_file()
-                    and packed.stat().st_mtime_ns <= prop.stat().st_mtime_ns):
+            packed_ns = path_mtime_ns(packed)  # -1 when missing
+            if packed_ns < 0 or packed_ns <= path_mtime_ns(prop):
                 pack_graph(GraphStore(path), packed)
             path = packed
         return PackedGraphStore(path)
@@ -154,13 +154,25 @@ class GraphSession:
         config) — for ``run_batch`` that includes the sources tuple — so a
         long-lived session answering many distinct landmark sets would
         otherwise retain one jitted engine per set forever.
+    mutable:
+        Wrap the resolved store in a ``repro.graph.delta.DeltaGraphStore``
+        so ``apply_mutations`` can commit edge inserts/deletes/upserts.
+        Each commit bumps the graph epoch; the shared cache drops only the
+        dirty shards, and ``run_incremental`` can continue a previous
+        result instead of rerunning cold.  ``repro.graph.compact.compact``
+        folds accumulated deltas back into the base storage.
     """
 
     def __init__(self, store: ShardSource | str | os.PathLike,
                  config: EngineConfig | None = None, max_engines: int = 16,
-                 *, backend: str | None = None, **overrides):
+                 *, backend: str | None = None, mutable: bool = False,
+                 **overrides):
         self._owns_store = isinstance(store, (str, os.PathLike))
         store = _resolve_source(store, backend)
+        if mutable:
+            from repro.graph.delta import DeltaGraphStore
+            if not isinstance(store, DeltaGraphStore):
+                store = DeltaGraphStore(store)
         if config is None:
             config = EngineConfig.from_env(**overrides)
         elif overrides:
@@ -172,6 +184,9 @@ class GraphSession:
             budget_bytes=config.cache_budget_bytes,
             hot_fraction=config.cache_hot_fraction,
             promote_after=config.cache_promote_after)
+        # graph epoch the shared arrays below were read at; engines inherit
+        # it and re-sync per run when a mutable store moves past it
+        self._graph_epoch = _store_epoch(store)
         # shared vertex metadata: read from disk exactly once per session
         self.in_deg, self.out_deg = store.read_vertex_info()
         self.blooms = store.read_all_blooms()
@@ -418,6 +433,111 @@ class GraphSession:
             else:
                 results.append(self.run(item, **run_kwargs))
         return results
+
+    # -- mutation / incremental recompute -------------------------------
+    def apply_mutations(self, inserts=None, deletes=None,
+                        updates=None) -> int:
+        """Commit one batch of edge edits to a ``mutable=True`` session.
+
+        ``inserts``/``updates`` (synonyms — both upsert) take ``(src, dst)``
+        or ``(src, dst, weight)`` arrays or triple iterables; ``deletes``
+        takes ``(src, dst)`` pairs.  Returns the new graph epoch.  The
+        session's shared degree arrays and Bloom filters are refreshed for
+        exactly the shards that changed; the shared cache drops stale
+        entries lazily on next access.  Runs already in flight pinned the
+        previous epoch and will raise ``ConcurrentMutationError`` rather
+        than mix epochs — drain them first (``GraphService.apply_mutations``
+        does this for serving workloads).
+        """
+        apply = getattr(self.store, "apply", None)
+        if apply is None:
+            raise TypeError(
+                "this session's store is frozen; open it with "
+                "GraphSession(path, mutable=True) (or wrap the store in a "
+                "DeltaGraphStore) before applying edge mutations")
+        epoch = apply(inserts=inserts, deletes=deletes, updates=updates)
+        self._refresh_graph_state()
+        return epoch
+
+    def _refresh_graph_state(self) -> None:
+        """Re-read graph-derived session state after the store's epoch moved.
+
+        Mirrors ``VSWEngine._sync_graph_state`` for the session-owned shared
+        arrays, so engines built *after* a mutation start consistent.  The
+        blooms list is shared by reference with every live engine — updating
+        entries in place keeps them all coherent.
+        """
+        prev = self._graph_epoch
+        cur = _store_epoch(self.store)
+        if cur == prev:
+            return
+        self.in_deg, self.out_deg = self.store.read_vertex_info()
+        shard_meta = self.store.properties["shards"]
+        self.max_rows = max((m["rows"] for m in shard_meta), default=8)
+        self.n_pad = max(self.n_pad, self.n + self.max_rows)  # grow-only
+        self.out_deg_dev = jnp.asarray(
+            np.pad(self.out_deg, (0, self.n_pad - self.n)).astype(np.float32))
+        shard_epoch = getattr(self.store, "shard_epoch", None)
+        for p in range(self.store.num_shards):
+            if shard_epoch is None or shard_epoch(p) > prev:
+                self.blooms[p] = self.store.read_bloom(p)
+        self._graph_epoch = cur
+
+    def run_incremental(self, app: str | VertexProgram, *,
+                        prev: RunResult, max_iters: int = 200,
+                        config: EngineConfig | None = None,
+                        **app_kwargs) -> RunResult:
+        """Continue a previous run's fixpoint across graph mutations.
+
+        ``prev`` must be the ``RunResult`` of the same application and
+        source over this session's store.  When every commit since
+        ``prev.epoch`` was *monotone* (insert-only / weight-non-increasing)
+        and the application is registered ``incremental=True`` (SSSP, BFS,
+        CC — min-propagations whose old fixpoint stays a valid upper
+        bound), the run seeds its values from ``prev`` and its frontier
+        from just the source vertices the deltas touched: convergence takes
+        the few iterations the change actually propagates, and selective
+        scheduling reads only the shards those frontiers reach.
+
+        Falls back to a cold full run whenever the shortcut would be
+        unsound: a non-incremental app, a delete or weight increase since
+        ``prev.epoch``, an unconverged ``prev``, or an epoch log truncated
+        past it.  If the store has not moved since ``prev``, returns the
+        previous values directly (0 iterations).
+        """
+        program, prog_key = self._resolve(app, app_kwargs)
+        if isinstance(program, BatchedVertexProgram):
+            raise TypeError(
+                "run_incremental takes single-frontier applications; "
+                "run_batch results cannot seed it")
+        tag = VSWEngine._tag_for(program)
+        if prev.tag is not None and prev.tag != tag:
+            raise ValueError(
+                f"prev result was produced by {prev.tag!r}, not {tag!r}; "
+                "incremental recompute must continue the same program and "
+                "source")
+        cur = _store_epoch(self.store)
+        if cur == prev.epoch and prev.converged:
+            # nothing changed since prev: its fixpoint is still the answer
+            return RunResult(values=np.array(prev.values), iterations=0,
+                             history=[], converged=True, epoch=cur, tag=tag)
+        name = app if isinstance(app, str) else program.name
+        monotone_since = getattr(self.store, "monotone_since", None)
+        seeds = None
+        if (prev.converged and is_incremental(name)
+                and monotone_since is not None
+                and monotone_since(prev.epoch)):
+            # None when the epoch log no longer reaches back to prev.epoch
+            seeds = self.store.affected_sources_since(prev.epoch)
+        eng = self._engine_for(program, prog_key, config)
+        run_program = program if prog_key[0] == "sig" else None
+        if seeds is None:
+            return eng.run(max_iters=max_iters, program=run_program)
+        values = np.array(prev.values)
+        active = np.zeros(self.n, dtype=bool)
+        active[seeds] = True
+        return eng.run(max_iters=max_iters, program=run_program,
+                       init_state=(values, active))
 
     def service(self, config=None, **overrides):
         """A concurrent query service over this session.
