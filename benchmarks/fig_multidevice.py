@@ -1,0 +1,82 @@
+"""Sharded VSW: edges/sec and per-lane stall vs device count.
+
+The claim under measurement (ISSUE 7 tentpole): routing one VSW iteration
+through ``ShardedVSWEngine`` folds N shards per wave across N devices while
+keeping results bitwise-identical and disk accounting canonical — so
+edges/sec should hold or rise with the device count and the summed per-lane
+stall should not blow up, while disk bytes stay EXACTLY constant across
+device counts (same schedule, same shards, split across cache partitions).
+
+jax fixes the process's device count at first init, so each count runs in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.  On
+one physical CPU the N "devices" share cores — this measures the sharded
+path's overhead and accounting, not real scaling.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import BENCH_DIR, get_store, row
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+MAX_ITERS = 8
+
+_CHILD = """
+import json, sys
+import numpy as np
+from repro.session import GraphSession
+
+path, devices, max_iters = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+with GraphSession(path, num_devices=devices, prefetch_depth=2) as sess:
+    sess.run("pagerank", max_iters=1)  # warm the jit caches (not measured)
+    disk0 = sess.stats.disk_bytes
+    res = sess.run("pagerank", max_iters=max_iters)
+    print(json.dumps({
+        "eps": res.edges_per_second(),
+        "disk": sess.stats.disk_bytes - disk0,
+        "stall": sum(h.stall_seconds for h in res.history),
+        "fetch": sum(h.fetch_seconds for h in res.history),
+        "secs": res.total_seconds,
+        "checksum": float(np.asarray(res.values).sum()),
+    }))
+"""
+
+
+def _measure(path: str, devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH", ""), *sys.path) if p)
+    env["BENCH_DIR"] = str(BENCH_DIR.parent)  # reuse the shared store
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD, path, str(devices), str(MAX_ITERS)],
+        capture_output=True, text=True, timeout=1200, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"devices={devices} failed:\n{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def run() -> list[str]:
+    out = []
+    path = str(get_store().path)
+    disk_seen, checksums = set(), set()
+    for d in DEVICE_COUNTS:
+        m = _measure(path, d)
+        disk_seen.add(m["disk"])
+        checksums.add(m["checksum"])
+        out.append(row(
+            f"fig_multidevice_pagerank_dev{d}", m["secs"] * 1e6,
+            f"edges_per_s={m['eps']:.3g};stall_s={m['stall']:.3f};"
+            f"fetch_s={m['fetch']:.3f};disk_MB={m['disk']/1e6:.1f}"))
+    # same schedule + shards at every device count: canonical disk bytes and
+    # the result itself must not drift
+    out.append(row(
+        "fig_multidevice_disk_invariant", 0.0,
+        f"identical={'yes' if len(disk_seen) == 1 else 'NO'}"))
+    out.append(row(
+        "fig_multidevice_result_invariant", 0.0,
+        f"identical={'yes' if len(checksums) == 1 else 'NO'}"))
+    return out

@@ -9,10 +9,11 @@ import traceback
 def main() -> None:
     from benchmarks import (fig7_selective, fig8_cache_modes, fig10_inmemory,
                             fig_batch_frontiers, fig_cache_tiers,
-                            fig_delta_incremental, fig_pipeline_overlap,
-                            fig_serve_throughput, grad_compression,
-                            kernel_spmv, roofline_report, table2_compression,
-                            table3_io_model, table5_apps, table8_preprocessing)
+                            fig_delta_incremental, fig_multidevice,
+                            fig_pipeline_overlap, fig_serve_throughput,
+                            grad_compression, kernel_spmv, roofline_report,
+                            table2_compression, table3_io_model, table5_apps,
+                            table8_preprocessing)
     modules = [
         ("table2_compression", table2_compression),
         ("table3_io_model", table3_io_model),
@@ -24,6 +25,7 @@ def main() -> None:
         ("fig_batch_frontiers", fig_batch_frontiers),
         ("fig_cache_tiers", fig_cache_tiers),
         ("fig_pipeline_overlap", fig_pipeline_overlap),
+        ("fig_multidevice", fig_multidevice),
         ("fig_serve_throughput", fig_serve_throughput),
         ("fig_delta_incremental", fig_delta_incremental),
         ("kernel_spmv", kernel_spmv),

@@ -9,9 +9,11 @@ Bloom filters never produce false negatives, so skipping is always safe
 false positives only cost an unnecessary load — exactly the paper's contract.
 Property-tested in tests/test_bloom.py.
 
-The host scheduler uses the numpy path; a jnp path is provided so the same
-filter can be probed on-device (used by the distributed engine to keep the
-schedule identical on every host without coordination).
+Probing is host-side numpy everywhere, including the multi-device engines:
+the filters are KBs, so they are simply REPLICATED — every host probes the
+same filters against the same frontier and derives the identical skip
+schedule without any cross-device coordination (see core/distributed.py).
+There is deliberately no on-device (jnp) probe path.
 """
 from __future__ import annotations
 

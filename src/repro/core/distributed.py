@@ -1,31 +1,50 @@
-"""Distributed VSW (beyond-paper): GraphMP's single-writer invariant on a mesh.
+"""Multi-device VSW: GraphMP's single-writer invariant on a device mesh.
 
-GraphMP is single-machine; its no-atomics property — every in-edge of a vertex
-lives in exactly one shard — extends directly to a device mesh: partition
-destination intervals over the ``data`` axis (one writer device per interval)
-and keep the source array device-resident, refreshed once per iteration by an
-``all_gather`` (the only collective; C|V| per iteration, the same volume the
-paper writes to DRAM).
+GraphMP is single-machine; its no-atomics property — every in-edge of a
+vertex lives in exactly one shard — extends directly to a device mesh:
+partition destination intervals over the ``data`` axis (one writer device
+per interval) and keep the source array device-resident, refreshed once per
+iteration by an ``all_gather`` (the only collective; C|V| per iteration, the
+same volume the paper writes to DRAM).  That is how GraphH (arxiv
+1705.05595, same authors) scales the model to small clusters.
 
-Per iteration, per device (under shard_map):
+Two engines live here:
 
-    x        = gather_transform(src_full)            # local, no comm
-    partial  = ell_spmv(x, local shards)             # local SpMV (Pallas)
-    new_own  = post(partial, src_own)                # local interval update
-    src_full = all_gather(new_own, 'data')           # frontier exchange
+``ShardedVSWEngine`` — the production path (``EngineConfig.num_devices``,
+env ``GRAPHMP_DEVICES``; ``GraphSession`` routes to it transparently).  It
+subclasses ``VSWEngine`` and keeps the whole I/O story: shards stream from
+the store through per-device ``CompressedShardCache`` partitions (one global
+byte budget, split exactly — core/cache.py ``PartitionedShardCache``) and
+per-device ``ShardPipeline`` prefetch lanes, with epoch pinning /
+``ConcurrentMutationError`` intact.  Each iteration:
 
-Active-vertex tracking is a psum of changed counts, so the Bloom-filter
-schedule stays identical on every host without coordination (the filters are
-replicated — they are KBs).
+    x     = gather_transform(src)                  # replicated, no comm
+    waves : device d folds its w-th scheduled shard (shard_map'ped
+            gather -> SpMV -> post, single-writer per interval)
+    merge : each device slices its own interval, a psum combines the
+            changed-count, an all_gather exchanges the frontier blocks
 
-The 2-D (src × dst) partition from DESIGN.md §2 maps the ``model`` axis over
-source ranges with a psum over partials; implemented in `spmv_2d` below and
-used by the graph-engine dry-run config.
+Selective scheduling stays host-side: the per-shard Bloom filters are KBs
+and REPLICATED, so every host computes the identical skip schedule with no
+coordination (core/bloom.py).  Results are bitwise-identical to the
+single-device engine at any device count — the same per-shard kernels run
+with identity padding that cannot perturb f32 reductions (pow2 zero-pad on
+the fold axis, masked rows routed to a discarded segment).
+
+``DistributedVSW`` — the all-resident prototype kept for mesh-semantics
+tests and as the minimal reference: the WHOLE edge set is partitioned onto
+the mesh up front (``partition_for_mesh``), so there is no disk, cache or
+prefetch path.  It honors ``EngineConfig.use_pallas`` and
+``selective_threshold`` (replicated-Bloom device skipping) and documents the
+I/O knobs as inapplicable rather than accepting-and-ignoring them.
+
+The 2-D (src × dst) partition from DESIGN.md §2 maps a second mesh axis over
+source ranges with a psum (min-fold for min-semirings) over partials;
+implemented in ``spmv_2d`` and used by the graph-engine dry-run config.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -33,21 +52,363 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.apps import VertexProgram, get_app
-from repro.core.shards import SUBLANE, ELLShard, build_csr_shards, csr_to_ell
-from repro.kernels.spmv.ops import ell_spmv
+from repro.core.bloom import BloomFilter
+from repro.core.cache import PartitionedShardCache
+from repro.core.engine import EngineConfig, VSWEngine
+from repro.core.pipeline import ShardPipeline
+from repro.core.shards import LANE, SUBLANE, ELLShard, build_csr_shards, csr_to_ell
+from repro.dist.context import make_data_mesh
+from repro.kernels.spmv.ops import ell_spmv, ell_spmv_batch
 
 
+# ---------------------------------------------------------------------------
+def assign_shards(intervals: np.ndarray, shard_nnz, num_devices: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Contiguous, nnz-balanced shard -> device assignment.
+
+    Returns ``(owner [P], bounds [D+1])``: device ``d`` owns the shards
+    ``p`` with ``owner[p] == d``, whose destination intervals tile exactly
+    ``[bounds[d], bounds[d+1])``.  Contiguity keeps every device's write
+    region ONE interval — the single-writer invariant survives the mesh and
+    the merge step needs only static slices; greedy nnz balancing keeps
+    per-device SpMV work even.  A device may own zero shards (more devices
+    than shards, or one giant shard): its bounds collapse and it runs dummy
+    waves.
+    """
+    intervals = np.asarray(intervals, dtype=np.int64)
+    P_ = len(intervals) - 1
+    D = int(num_devices)
+    if D < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    weights = np.asarray(shard_nnz, dtype=np.float64)
+    if len(weights) != P_:
+        raise ValueError(
+            f"shard_nnz has {len(weights)} entries for {P_} shards")
+    if weights.sum() <= 0:
+        weights = np.ones(P_, dtype=np.float64)
+    total = float(weights.sum())
+    owner = np.zeros(P_, dtype=np.int64)
+    cum, d = 0.0, 0
+    for p in range(P_):
+        owner[p] = d
+        cum += weights[p]
+        while d < D - 1 and cum >= total * (d + 1) / D:
+            d += 1
+    bounds = np.empty(D + 1, dtype=np.int64)
+    bounds[D] = intervals[-1]
+    for dd in range(D - 1, -1, -1):
+        owned = np.nonzero(owner == dd)[0]
+        bounds[dd] = intervals[owned[0]] if owned.size else bounds[dd + 1]
+    bounds[0] = intervals[0]
+    return owner, bounds
+
+
+# ---------------------------------------------------------------------------
+class ShardedVSWEngine(VSWEngine):
+    """VSWEngine whose edge sweep drives ``config.num_devices`` devices.
+
+    The base class owns everything host-side (convergence, checkpoints,
+    selective scheduling, epoch pinning); this subclass swaps the per-
+    iteration internals through the documented seams:
+
+    * ``_fetch_shard`` routes each shard to its owning device's cache
+      partition (``PartitionedShardCache`` — one global budget, split);
+    * ``_make_pipeline`` builds one prefetch lane per device
+      (``ShardPipeline`` each, staging host-side on the worker thread);
+    * ``_sweep`` splits the Bloom-scheduled shard list by owner and runs it
+      in WAVES: wave ``w`` stacks each device's ``w``-th shard into one
+      ``[D, R, W]`` batch, a ``shard_map``'ped step folds all D shards
+      concurrently (single-writer: device ``d`` only writes its interval),
+      then a merge step psums the changed-count and ``all_gather``s the
+      per-device frontier blocks back into the replicated value array;
+    * ``_io_marks`` / ``_io_stats`` account disk/stall/fetch per device and
+      as honest sums (``IterationStats.device_*`` tuples).
+
+    Bitwise identity with the single-device engine holds by construction:
+    the same ELL kernels run on the same shards; wave padding appends only
+    reduce-identity material (pow2 zero-padding on the fold axis, padded
+    ELL rows routed to a masked or dropped segment) and the merge takes
+    each row from exactly its owner device.
+    """
+
+    def __init__(self, store, program, config=None, *, cache=None, **kw):
+        cfg = config if isinstance(config, EngineConfig) else EngineConfig()
+        D = cfg.num_devices
+        self._num_devices = D
+        self._axis = "data"
+        self._mesh = make_data_mesh(D, self._axis)
+        shard_meta = store.properties["shards"]
+        nnz = [int(m.get("nnz", 0)) for m in shard_meta]
+        self._owner, self._bounds = assign_shards(
+            np.asarray(store.intervals), nnz, D)
+        self._block_lens = [int(self._bounds[d + 1] - self._bounds[d])
+                            for d in range(D)]
+        self._per_max = max(self._block_lens, default=1) or 1
+        if not (isinstance(cache, PartitionedShardCache)
+                and cache.num_partitions == D
+                and np.array_equal(cache.owner, self._owner)):
+            # sessions configured with num_devices build the partitioned
+            # cache up front and share it; a per-run config override (or
+            # direct construction) gets a private partitioned cache instead
+            cache = PartitionedShardCache(
+                store, self._owner, D, mode=cfg.cache_mode,
+                budget_bytes=cfg.cache_budget_bytes,
+                hot_fraction=cfg.cache_hot_fraction,
+                promote_after=cfg.cache_promote_after)
+        super().__init__(store, program, config, cache=cache, **kw)
+        # the merge step slices [bounds[d], bounds[d] + per_max) and dummy
+        # waves write into [n, n + R); grow the vertex padding to cover both
+        need = self.n + self._per_max
+        if need > self.n_pad:
+            self.n_pad = need
+            self._out_deg_dev = jnp.asarray(
+                np.pad(self.out_deg,
+                       (0, self.n_pad - self.n)).astype(np.float32))
+
+    # -- construction seams ---------------------------------------------
+    def _fetch_shard(self, p: int) -> ELLShard:
+        # self.cache is the PartitionedShardCache: owner-routed
+        return self.cache.get(p)
+
+    def _make_pipeline(self):
+        # one prefetch lane per device; lane d streams only device d's
+        # shards, each fetch landing in that device's cache partition
+        self._lanes = [
+            ShardPipeline(self._get_shard, depth=self.config.prefetch_depth,
+                          stage=self._stage, nbytes=ELLShard.decoded_nbytes)
+            for _ in range(self._num_devices)
+        ]
+        return None  # per-lane stats replace the single self._pipeline
+
+    def _stage(self, shard: ELLShard):
+        """Host-side staging only (mmap page-in + copy on the worker
+        thread); the device transfer happens at wave assembly, where the
+        wave's common [D, R, W] layout is known."""
+        return (self._materialize(shard.cols), self._materialize(shard.vals),
+                self._materialize(shard.row_map))
+
+    # -- compiled steps ---------------------------------------------------
+    def _build_steps(self) -> None:
+        super()._build_steps()
+        program, n, D = self.program, self.n, self._num_devices
+        semiring, use_pallas = program.semiring, self.use_pallas
+        ax, mesh = self._axis, self._mesh
+        rep, shd = P(), P(ax)
+        B, lens, per_max = self._bounds, self._block_lens, self._per_max
+        starts_c = jnp.asarray(B[:D].astype(np.int32))
+        ends_c = jnp.asarray(B[1:].astype(np.int32))
+
+        # replicated src broadcast into the per-device [D, n_pad(, K)] dst
+        self._dst_init = jax.jit(
+            lambda s: jnp.broadcast_to(s[None], (D,) + s.shape),
+            out_shardings=NamedSharding(mesh, shd))
+
+        if self.batched:
+            has_aux = getattr(program, "make_aux", None) is not None
+
+            def wave(dst, x, src, aux, cols, vals, row_map, start, num_rows):
+                dst, cols, vals, row_map = dst[0], cols[0], vals[0], row_map[0]
+                start, num_rows = start[0], num_rows[0]
+                R, K = cols.shape[0], src.shape[1]
+                seg = ell_spmv_batch(x, cols, vals, row_map, R, semiring,
+                                     use_pallas=use_pallas)
+                old_slice = jax.lax.dynamic_slice(src, (start, 0), (R, K))
+                rows = start + jnp.arange(R)
+                aux_slice = (jax.lax.dynamic_slice(aux, (start, 0), (R, K))
+                             if has_aux else None)
+                new_slice = program.post(seg, old_slice, rows, n,
+                                         aux_slice).astype(dst.dtype)
+                keep = (jnp.arange(R) < num_rows)[:, None]
+                new_slice = jnp.where(keep, new_slice, old_slice)
+                return jax.lax.dynamic_update_slice(dst, new_slice,
+                                                    (start, 0))[None]
+
+            wave_in = (shd, rep, rep, rep, shd, shd, shd, shd, shd)
+
+            def merge(dst, src):
+                dstl = dst[0]
+                d = jax.lax.axis_index(ax)
+                b = starts_c[d]
+                K = src.shape[1]
+                own = jax.lax.dynamic_slice(dstl, (b, 0), (per_max, K))
+                old = jax.lax.dynamic_slice(src, (b, 0), (per_max, K))
+                real = (b + jnp.arange(per_max) < ends_c[d])[:, None]
+                chm = program.changed(own, old) & real
+                cnt = jax.lax.psum(jnp.sum(chm.astype(jnp.int32)), ax)
+                gathered = jax.lax.all_gather(own, ax)  # [D, per_max, K]
+                new_full = src
+                for dd in range(D):
+                    if lens[dd]:
+                        new_full = jax.lax.dynamic_update_slice(
+                            new_full, gathered[dd, : lens[dd]],
+                            (int(B[dd]), 0))
+                return new_full, cnt
+        else:
+            def wave(dst, x, src, cols, vals, row_map, start, num_rows):
+                dst, cols, vals, row_map = dst[0], cols[0], vals[0], row_map[0]
+                start, num_rows = start[0], num_rows[0]
+                R = cols.shape[0]
+                seg = ell_spmv(x, cols, vals, row_map, R, semiring,
+                               use_pallas=use_pallas)
+                old_slice = jax.lax.dynamic_slice(src, (start,), (R,))
+                new_slice = program.post(seg, old_slice, n).astype(dst.dtype)
+                keep = jnp.arange(R) < num_rows
+                new_slice = jnp.where(keep, new_slice, old_slice)
+                return jax.lax.dynamic_update_slice(dst, new_slice,
+                                                    (start,))[None]
+
+            wave_in = (shd, rep, rep, shd, shd, shd, shd, shd)
+
+            def merge(dst, src):
+                dstl = dst[0]
+                d = jax.lax.axis_index(ax)
+                b = starts_c[d]
+                own = jax.lax.dynamic_slice(dstl, (b,), (per_max,))
+                old = jax.lax.dynamic_slice(src, (b,), (per_max,))
+                real = b + jnp.arange(per_max) < ends_c[d]
+                chm = program.changed(own, old) & real
+                cnt = jax.lax.psum(jnp.sum(chm.astype(jnp.int32)), ax)
+                gathered = jax.lax.all_gather(own, ax)  # [D, per_max]
+                new_full = src
+                for dd in range(D):
+                    if lens[dd]:
+                        new_full = jax.lax.dynamic_update_slice(
+                            new_full, gathered[dd, : lens[dd]], (int(B[dd]),))
+                return new_full, cnt
+
+        self._wave_step = jax.jit(
+            jax.shard_map(wave, mesh=mesh, in_specs=wave_in, out_specs=shd,
+                          check_vma=False),
+            donate_argnums=(0,))
+        self._merge_step = jax.jit(
+            jax.shard_map(merge, mesh=mesh, in_specs=(shd, rep),
+                          out_specs=(rep, rep), check_vma=False),
+            donate_argnums=(0,))
+
+    # -- per-iteration seams ----------------------------------------------
+    def _assemble_wave(self, entries):
+        """Stack one shard per device (or a dummy) into the wave's common
+        [D, R, W] layout and place it sharded over the mesh.
+
+        Padding is reduce-identity by construction, so results stay bitwise
+        equal to running each shard at its own bucketed shape: cols -1
+        (masked out of the fold; zero-padding a pow2-lane f32 reduction
+        adds +0.0 per lane accumulator), padded ELL rows routed to segment
+        min(num_rows, R) — a keep-masked destination row when it exists,
+        otherwise out of range and dropped by the segment combine.  Dummies
+        (a device with no shard this wave) write their restored old values
+        at ``start = n``, i.e. into the padding region, so they cannot
+        revert a real row updated by an earlier wave.
+        """
+        D = self._num_devices
+        shards = [e[1] for e in entries if e is not None]
+        R = max((s.cols.shape[0] for s in shards), default=SUBLANE)
+        W = max((s.cols.shape[1] for s in shards), default=LANE)
+        cols = np.full((D, R, W), -1, dtype=np.int32)
+        vals = np.zeros((D, R, W), dtype=np.float32)
+        rmap = np.zeros((D, R), dtype=np.int32)
+        start = np.full(D, self.n, dtype=np.int32)
+        nrows = np.zeros(D, dtype=np.int32)
+        for d, e in enumerate(entries):
+            if e is None:
+                continue
+            _p, shard, staged = e
+            c, v, rm = staged
+            r, w = c.shape
+            nr = int(shard.end_vertex - shard.start_vertex)
+            cols[d, :r, :w] = c
+            vals[d, :r, :w] = v
+            rmap[d, :r] = rm
+            rmap[d, r:] = min(nr, R)
+            start[d] = shard.start_vertex
+            nrows[d] = nr
+        sharding = NamedSharding(self._mesh, P(self._axis))
+        return tuple(jax.device_put(a, sharding)
+                     for a in (cols, vals, rmap, start, nrows))
+
+    def _sweep(self, x, src, aux_dev, schedule, epoch_check):
+        D = self._num_devices
+        scheds = [[p for p in schedule if self._owner[p] == d]
+                  for d in range(D)]
+        waves = max(len(s) for s in scheds)
+        dst = self._dst_init(src)
+        streams = [self._lanes[d].stream(scheds[d], check=epoch_check)
+                   for d in range(D)]
+        try:
+            for w in range(waves):
+                entries = [next(streams[d]) if w < len(scheds[d]) else None
+                           for d in range(D)]
+                tail = self._assemble_wave(entries)
+                if self.batched:
+                    dst = self._wave_step(dst, x, src, aux_dev, *tail)
+                else:
+                    dst = self._wave_step(dst, x, src, *tail)
+        finally:
+            for s in streams:
+                s.close()  # run pipeline cleanup (reap prefetch workers)
+        new_src, changed_count = self._merge_step(dst, src)
+        if int(changed_count) == 0:
+            # the psum'd count short-circuits the full mask pull
+            shape = ((self.n, src.shape[1]) if self.batched else (self.n,))
+            changed = np.zeros(shape, dtype=bool)
+        else:
+            changed = np.asarray(self._changed_fn(new_src, src))
+        return new_src, changed
+
+    def _io_marks(self):
+        return ([(c.stats.disk_bytes, c.stats.hits, c.stats.misses,
+                  c.stats.decode_seconds_saved) for c in self.cache.parts],
+                [(l.stats.stall_seconds, l.stats.fetch_seconds)
+                 for l in self._lanes])
+
+    def _io_stats(self, marks) -> dict:
+        cache_marks, lane_marks = marks
+        d_disk, d_saved, hits, total = [], [], 0, 0
+        for part, (disk0, hits0, misses0, saved0) in zip(self.cache.parts,
+                                                         cache_marks):
+            s = part.stats
+            d_disk.append(s.disk_bytes - disk0)
+            d_saved.append(s.decode_seconds_saved - saved0)
+            hits += s.hits - hits0
+            total += (s.hits - hits0) + (s.misses - misses0)
+        d_stall = [l.stats.stall_seconds - s0
+                   for l, (s0, _f0) in zip(self._lanes, lane_marks)]
+        d_fetch = [l.stats.fetch_seconds - f0
+                   for l, (_s0, f0) in zip(self._lanes, lane_marks)]
+        return dict(
+            disk_bytes=sum(d_disk),
+            cache_hit_ratio=hits / total if total else 0.0,
+            # lanes are drained on the one consumer thread, so its total
+            # blocked time is the SUM of per-lane stalls; fetch work happens
+            # per worker and also sums
+            stall_seconds=sum(d_stall),
+            fetch_seconds=sum(d_fetch),
+            decode_seconds_saved=sum(d_saved),
+            device_disk_bytes=tuple(d_disk),
+            device_stall_seconds=tuple(d_stall),
+            device_fetch_seconds=tuple(d_fetch),
+        )
+
+
+# ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class DeviceShardedGraph:
-    """Edges repartitioned so device d owns destination interval d (1-D)."""
+    """Edges repartitioned so device d owns destination interval d (1-D).
 
-    num_vertices: int          # padded to a multiple of num_devices
+    ``num_vertices`` is the TRUE vertex count; the device intervals tile
+    ``padded_num_vertices`` (the next multiple of the device count), and
+    every consumer masks the padding rows out of init/post/changed.
+    """
+
+    num_vertices: int          # true |V|
+    padded_num_vertices: int   # |V| rounded up to a multiple of num_devices
     num_edges: int
     cols: np.ndarray           # [D, R, W] int32 (per-device ELL, common shape)
     vals: np.ndarray           # [D, R, W] float32
     row_map: np.ndarray        # [D, R] int32 (local row within the device interval)
-    out_deg: np.ndarray        # [num_vertices] int64
-    rows_per_device: int       # interval length n/D
+    out_deg: np.ndarray        # [padded_num_vertices] int64 (0 on padding)
+    rows_per_device: int       # interval length padded_num_vertices / D
+    blooms: list               # per-device source-vertex BloomFilters (replicated)
 
 
 def partition_for_mesh(
@@ -60,6 +421,7 @@ def partition_for_mesh(
     # build_csr_shards with huge threshold yields one shard; re-cut at device bounds
     csr = shards[0]
     ells: list[ELLShard] = []
+    blooms: list[BloomFilter] = []
     for d in range(num_devices):
         lo, hi = d * per, (d + 1) * per
         sub = dataclasses.replace(
@@ -72,6 +434,9 @@ def partition_for_mesh(
             val=None if csr.val is None else csr.val[csr.row[lo] : csr.row[hi]],
         )
         ells.append(csr_to_ell(sub, max_width=ell_max_width))
+        sources = np.unique(sub.col)
+        blooms.append(BloomFilter.build(
+            sources, num_bits=BloomFilter.sized_for(sources.size)))
     R = max(((e.shape[0] + SUBLANE - 1) // SUBLANE) * SUBLANE for e in ells)
     W = max(e.shape[1] for e in ells)
     cols = np.full((num_devices, R, W), -1, dtype=np.int32)
@@ -84,28 +449,58 @@ def partition_for_mesh(
         row_map[d, :r] = e.row_map
     out_deg = np.bincount(src, minlength=n_pad).astype(np.int64)
     return DeviceShardedGraph(
-        num_vertices=n_pad, num_edges=len(src), cols=cols, vals=vals,
-        row_map=row_map, out_deg=out_deg, rows_per_device=per,
+        num_vertices=int(num_vertices), padded_num_vertices=n_pad,
+        num_edges=len(src), cols=cols, vals=vals,
+        row_map=row_map, out_deg=out_deg, rows_per_device=per, blooms=blooms,
     )
 
 
 class DistributedVSW:
-    """1-D distributed VSW engine over a mesh axis (default 'data')."""
+    """1-D distributed VSW prototype: the WHOLE graph resident on the mesh.
+
+    The minimal mesh-semantics reference (and oracle target for
+    ``ShardedVSWEngine``): ``partition_for_mesh`` places every edge on its
+    owner device up front, so an iteration is one ``shard_map``'ped
+    gather -> SpMV -> post with an ``all_gather`` frontier exchange and a
+    psum'd changed-count — no disk, no cache, no prefetch.
+
+    ``config`` (an ``EngineConfig``) shares the session-level tuning
+    surface.  Honored fields: ``use_pallas`` (SpMV backend) and
+    ``selective_threshold`` — below it, the replicated per-device Bloom
+    filters (``DeviceShardedGraph.blooms``) gate which devices compute at
+    all (a skipped device keeps its interval unchanged); every host probes
+    the same filters, so the schedule needs no coordination.  The I/O
+    fields (``cache_*``, ``prefetch_depth``, ``preload``) do not apply —
+    there is no storage path here to tune; use ``ShardedVSWEngine`` (via
+    ``GraphSession`` with ``num_devices > 1``) for the streaming engine.
+
+    Padding correctness: vertex ids in ``[num_vertices,
+    padded_num_vertices)`` exist only to even the device intervals.  They
+    are initialized to zero (never by ``program.init``, which sees the TRUE
+    ``n``), masked out of the changed-count, and sliced off the returned
+    values, so they can neither absorb PageRank mass nor join the CC label
+    space.
+    """
 
     def __init__(self, graph: DeviceShardedGraph,
                  program: VertexProgram | str,
                  mesh: Mesh, axis: str = "data",
-                 use_pallas: bool | str = "auto", config=None):
+                 use_pallas: bool | str = "auto",
+                 config: EngineConfig | None = None):
         if isinstance(program, str):
             program = get_app(program)
-        if config is not None:  # share EngineConfig tuning with the session API
-            use_pallas = config.use_pallas
         self.g = graph
         self.program = program
         self.mesh = mesh
         self.axis = axis
+        self.num_devices = graph.cols.shape[0]
+        self.selective_threshold = EngineConfig.selective_threshold
+        if config is not None:
+            use_pallas = config.use_pallas
+            self.selective_threshold = config.selective_threshold
         self.use_pallas = use_pallas
         self.n = graph.num_vertices
+        self.n_pad = graph.padded_num_vertices
         edge_spec = P(axis)
         self._cols = jax.device_put(graph.cols, NamedSharding(mesh, edge_spec))
         self._vals = jax.device_put(graph.vals, NamedSharding(mesh, edge_spec))
@@ -116,41 +511,70 @@ class DistributedVSW:
     def _build_iter(self):
         program, n, per = self.program, self.n, self.g.rows_per_device
         semiring, use_pallas, axis = program.semiring, self.use_pallas, self.axis
-        other_axes = tuple(a for a in self.mesh.axis_names if a != axis)
 
-        def device_iter(src_full, out_deg, cols, vals, row_map):
+        def device_iter(src_full, out_deg, cols, vals, row_map, flags):
             # shard_map gives per-device blocks with a leading length-1 axis
-            cols, vals, row_map = cols[0], vals[0], row_map[0]
+            cols, vals, row_map, flag = cols[0], vals[0], row_map[0], flags[0]
             x = program.gather_transform(src_full, out_deg)
             R = cols.shape[0]
             seg = ell_spmv(x, cols, vals, row_map, R, semiring, use_pallas=use_pallas)
             d = jax.lax.axis_index(axis)
             old_own = jax.lax.dynamic_slice(src_full, (d * per,), (per,))
             new_own = program.post(seg[:per], old_own, n).astype(src_full.dtype)
-            changed = jnp.sum(program.changed(new_own, old_own).astype(jnp.int32))
+            # Bloom-skipped device: keep the old interval verbatim
+            new_own = jnp.where(flag != 0, new_own, old_own)
+            # padding rows (ids >= n) never count as changed
+            real = d * per + jnp.arange(per) < n
+            changed_own = program.changed(new_own, old_own) & real
+            changed = jnp.sum(changed_own.astype(jnp.int32))
             new_full = jax.lax.all_gather(new_own, axis, tiled=True)
+            changed_full = jax.lax.all_gather(changed_own, axis, tiled=True)
             changed_total = jax.lax.psum(changed, axis)
-            return new_full, changed_total
+            return new_full, changed_full, changed_total
 
         spec_rep = P()
         fn = jax.shard_map(
             device_iter,
             mesh=self.mesh,
-            in_specs=(spec_rep, spec_rep, P(self.axis), P(self.axis), P(self.axis)),
-            out_specs=(spec_rep, spec_rep),
+            in_specs=(spec_rep, spec_rep, P(self.axis), P(self.axis),
+                      P(self.axis), P(self.axis)),
+            out_specs=(spec_rep, spec_rep, spec_rep),
             check_vma=False,
         )
         return jax.jit(fn)
 
+    def _schedule_flags(self, active_ids: np.ndarray | None,
+                        active_ratio: float) -> np.ndarray:
+        """Replicated-Bloom device schedule (host-side, deterministic)."""
+        if active_ids is None or active_ratio >= self.selective_threshold:
+            return np.ones(self.num_devices, dtype=bool)
+        return np.array([b.might_contain_any(active_ids)
+                         for b in self.g.blooms], dtype=bool)
+
     def run(self, max_iters: int = 100) -> tuple[np.ndarray, int]:
-        values, _ = self.program.init(self.n, None, self.g.out_deg)
-        src = jnp.asarray(values.astype(np.float32))
-        it = 0
+        n = self.n
+        values, active = self.program.init(n, None, self.g.out_deg[:n])
+        src = jnp.asarray(
+            np.pad(values.astype(np.float32), (0, self.n_pad - n)))
+        active_ids = np.nonzero(np.asarray(active, dtype=bool))[0]
+        active_ratio = active_ids.size / max(n, 1)
+        flag_sharding = NamedSharding(self.mesh, P(self.axis))
+        it_done = 0
         for it in range(1, max_iters + 1):
-            src, changed = self._iter_fn(src, self._out_deg, self._cols, self._vals, self._rmap)
-            if int(changed) == 0:
+            flags = self._schedule_flags(active_ids, active_ratio)
+            if not flags.any():
+                break  # every device Bloom-skipped: nothing can change
+            flags_dev = jax.device_put(flags.astype(np.int32), flag_sharding)
+            src, changed_full, changed_total = self._iter_fn(
+                src, self._out_deg, self._cols, self._vals, self._rmap,
+                flags_dev)
+            it_done = it
+            if int(changed_total) == 0:
                 break
-        return np.asarray(src), it
+            mask = np.asarray(changed_full)[:n]
+            active_ids = np.nonzero(mask)[0]
+            active_ratio = active_ids.size / max(n, 1)
+        return np.asarray(src)[:n], it_done
 
 
 def spmv_2d(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,

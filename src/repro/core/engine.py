@@ -24,6 +24,12 @@ builds a private cache.
 Fault tolerance: the VSW invariant makes engine state tiny (2C|V| + cursor);
 ``checkpoint_every`` snapshots (values, iteration) with atomic rename, and
 ``run(resume=True)`` restarts from the latest snapshot.
+
+Multi-device: ``config.num_devices > 1`` routes sessions to
+``repro.core.distributed.ShardedVSWEngine``, a subclass that overrides the
+seams below (``_fetch_shard`` / ``_make_pipeline`` / ``_sweep`` /
+``_io_marks`` / ``_io_stats``) to drive N devices per iteration while
+``iter_run``'s convergence/checkpoint/epoch logic stays shared.
 """
 from __future__ import annotations
 
@@ -110,6 +116,14 @@ class EngineConfig:
     prefetch_depth (``GRAPHMP_PREFETCH``):
         Shards fetched ahead on a background thread (0 = synchronous,
         1 = double buffering).
+    num_devices (``GRAPHMP_DEVICES``):
+        Devices one VSW iteration drives concurrently.  1 (default) is the
+        single-device engine; > 1 routes runs through the sharded engine
+        (``repro.core.distributed.ShardedVSWEngine``): the shard schedule,
+        edge-cache partitions and prefetch lanes split per device and the
+        value matrix is partitioned over a 1-D ``jax.sharding.Mesh``.
+        Requires that many local jax devices (on CPU:
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
     """
 
     cache_mode: int | str = "auto"
@@ -120,6 +134,7 @@ class EngineConfig:
     use_pallas: bool | str = "auto"
     preload: bool = False
     prefetch_depth: int = 0
+    num_devices: int = 1
 
     def __post_init__(self):
         mode = self.cache_mode
@@ -162,6 +177,11 @@ class EngineConfig:
             raise ValueError(
                 f"prefetch_depth must be a non-negative int, "
                 f"got {self.prefetch_depth!r}")
+        if not isinstance(self.num_devices, int) \
+                or isinstance(self.num_devices, bool) \
+                or self.num_devices < 1:
+            raise ValueError(
+                f"num_devices must be an int >= 1, got {self.num_devices!r}")
 
     @classmethod
     def from_env(cls, **overrides) -> "EngineConfig":
@@ -184,6 +204,7 @@ class EngineConfig:
             preload=_env("GRAPHMP_PRELOAD", cls.preload,
                          lambda r: _cast_tristate(r) is True),
             prefetch_depth=_env("GRAPHMP_PREFETCH", cls.prefetch_depth, int),
+            num_devices=_env("GRAPHMP_DEVICES", cls.num_devices, int),
         )
         base.update(overrides)
         return cls(**base)
@@ -206,6 +227,13 @@ class IterationStats:
     stall_seconds: float = 0.0  # time the compute loop waited on shard I/O
     fetch_seconds: float = 0.0  # fetch+stage time (overlapped when prefetching)
     decode_seconds_saved: float = 0.0  # decompression cost hot-tier hits skipped
+    # multi-device runs only (empty tuples otherwise): per-device splits of
+    # the aggregates above — one entry per device, summing (disk/fetch) or
+    # totalling along the consumer's critical path (stall) to the aggregate,
+    # so Table-3 accounting stays honest across cache partitions
+    device_disk_bytes: tuple = ()
+    device_stall_seconds: tuple = ()
+    device_fetch_seconds: tuple = ()
 
 
 @dataclasses.dataclass
@@ -379,12 +407,12 @@ class VSWEngine:
         self._preloaded: dict[int, ELLShard] = {}
         if self.preload:
             for p in range(self.P):
-                self._preloaded[p] = self.cache.get(p)
+                self._preloaded[p] = self._fetch_shard(p)
         # ALL shard consumption goes through the pipeline — depth 0 is the
         # synchronous path, depth >= 1 prefetches + stages on a worker thread
-        self._pipeline = ShardPipeline(
-            self._get_shard, depth=self.config.prefetch_depth,
-            stage=self._stage, nbytes=ELLShard.decoded_nbytes)
+        # (the sharded engine overrides _make_pipeline with one lane per
+        # device and leaves self._pipeline as None)
+        self._pipeline = self._make_pipeline()
         self.last_result: RunResult | None = None
         # serializes run() calls on this engine: concurrent clients (the
         # serving layer) sharing one jitted engine run back-to-back instead
@@ -499,10 +527,22 @@ class VSWEngine:
                     f"callables must also replace jit_signature")
         return program
 
+    def _fetch_shard(self, p: int) -> ELLShard:
+        """Raw cache fetch (no preload shortcut) — the single overridable
+        seam that decides WHICH cache a shard comes from (the sharded engine
+        routes it to the owning device's cache partition)."""
+        return self.cache.get(p)
+
+    def _make_pipeline(self):
+        """Build the shard stream consumed by ``_sweep``."""
+        return ShardPipeline(
+            self._get_shard, depth=self.config.prefetch_depth,
+            stage=self._stage, nbytes=ELLShard.decoded_nbytes)
+
     def _get_shard(self, p: int) -> ELLShard:
         if p in self._preloaded:
             return self._preloaded[p]
-        return self.cache.get(p)
+        return self._fetch_shard(p)
 
     def _sync_graph_state(self) -> None:
         """Refresh graph-derived engine state after a store mutation.
@@ -535,7 +575,7 @@ class VSWEngine:
                 if shard_epoch is None or shard_epoch(p) > prev:
                     self.blooms[p] = self.store.read_bloom(p)
                     if p in self._preloaded:
-                        self._preloaded[p] = self.cache.get(p)
+                        self._preloaded[p] = self._fetch_shard(p)
             self._graph_epoch = cur
 
     @staticmethod
@@ -562,6 +602,45 @@ class VSWEngine:
             return list(range(self.P)), False
         keep = [p for p in range(self.P) if self.blooms[p].might_contain_any(active_ids)]
         return keep, True
+
+    # ------------------------------------------------------------------
+    # iteration internals — each one an override seam for the sharded engine
+    def _io_marks(self):
+        """Snapshot of the cache/pipeline counters an iteration deltas
+        against (opaque to iter_run; paired with ``_io_stats``)."""
+        cs, ps = self.cache.stats, self._pipeline.stats
+        return (cs.disk_bytes, cs.hits, cs.misses, cs.decode_seconds_saved,
+                ps.stall_seconds, ps.fetch_seconds)
+
+    def _io_stats(self, marks) -> dict:
+        """IterationStats I/O fields as deltas against ``marks``."""
+        disk0, hits0, misses0, saved0, stall0, fetch0 = marks
+        cs, ps = self.cache.stats, self._pipeline.stats
+        d_hits = cs.hits - hits0
+        d_total = d_hits + cs.misses - misses0
+        return dict(
+            disk_bytes=cs.disk_bytes - disk0,
+            cache_hit_ratio=d_hits / d_total if d_total else 0.0,
+            stall_seconds=ps.stall_seconds - stall0,
+            fetch_seconds=ps.fetch_seconds - fetch0,
+            decode_seconds_saved=cs.decode_seconds_saved - saved0,
+        )
+
+    def _sweep(self, x, src, aux_dev, schedule, epoch_check):
+        """One edge sweep: stream the scheduled shards, fold each into the
+        destination array.  Returns ``(new values [n_pad(, K)],
+        changed mask [n(, K)] as a numpy bool array)``."""
+        dst = src + 0.0  # materialize a copy: the shard step donates its dst
+        for _p, shard, dev in self._pipeline.stream(schedule,
+                                                    check=epoch_check):
+            cols_dev, vals_dev, row_map_dev = dev
+            tail = (cols_dev, vals_dev, row_map_dev, shard.start_vertex,
+                    shard.end_vertex - shard.start_vertex)
+            if self.batched:
+                dst = self._shard_step(dst, x, src, aux_dev, *tail)
+            else:
+                dst = self._shard_step(dst, x, src, *tail)
+        return dst, np.asarray(self._changed_fn(dst, src))
 
     # ------------------------------------------------------------------
     def iter_run(
@@ -675,11 +754,7 @@ class VSWEngine:
         last_changed = active_mask
         for it in range(start_iter, max_iters):
             t0 = time.time()
-            disk0 = self.cache.stats.disk_bytes
-            hits0, misses0 = self.cache.stats.hits, self.cache.stats.misses
-            saved0 = self.cache.stats.decode_seconds_saved
-            stall0 = self._pipeline.stats.stall_seconds
-            fetch0 = self._pipeline.stats.fetch_seconds
+            marks = self._io_marks()
             schedule, selective = self._schedule(active_ids, active_ratio)
             if not schedule:
                 converged = True
@@ -688,18 +763,7 @@ class VSWEngine:
                 # bill this sweep only to columns still holding a frontier
                 col_iters += col_live
             x = self._gather_fn(src, self._out_deg_dev)
-            dst = src  # donated into shard steps; untouched intervals keep old values
-            dst = dst + 0.0  # materialize a copy so src survives for `changed`
-            for _p, shard, dev in self._pipeline.stream(schedule,
-                                                        check=epoch_check):
-                cols_dev, vals_dev, row_map_dev = dev
-                tail = (cols_dev, vals_dev, row_map_dev, shard.start_vertex,
-                        shard.end_vertex - shard.start_vertex)
-                if self.batched:
-                    dst = self._shard_step(dst, x, src, aux_dev, *tail)
-                else:
-                    dst = self._shard_step(dst, x, src, *tail)
-            changed = np.asarray(self._changed_fn(dst, src))
+            dst, changed = self._sweep(x, src, aux_dev, schedule, epoch_check)
             last_changed = changed
             if self.batched:
                 col_live = changed.any(axis=0)
@@ -709,22 +773,15 @@ class VSWEngine:
             active_ids = np.nonzero(row_active)[0]
             active_ratio = active_ids.size / self.n
             src = dst
-            d_hits = self.cache.stats.hits - hits0
-            d_total = d_hits + self.cache.stats.misses - misses0
             stats = IterationStats(
                 iteration=it,
                 seconds=time.time() - t0,
                 active_ratio=active_ratio,
                 shards_processed=len(schedule),
                 shards_skipped=self.P - len(schedule),
-                disk_bytes=self.cache.stats.disk_bytes - disk0,
-                cache_hit_ratio=d_hits / d_total if d_total else 0.0,
                 selective_enabled=selective,
                 edges_processed=sum(self._shard_nnz[p] for p in schedule),
-                stall_seconds=self._pipeline.stats.stall_seconds - stall0,
-                fetch_seconds=self._pipeline.stats.fetch_seconds - fetch0,
-                decode_seconds_saved=(
-                    self.cache.stats.decode_seconds_saved - saved0),
+                **self._io_stats(marks),
             )
             history.append(stats)
             if checkpoint_dir and checkpoint_every and (it + 1) % checkpoint_every == 0:

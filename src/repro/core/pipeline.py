@@ -15,7 +15,10 @@ the old synchronous path (same code path, no thread).  A SINGLE worker
 fetching in schedule order is deliberate: cache accesses happen in exactly
 the order the synchronous path would issue them, so hit/miss/eviction
 sequences — and therefore the Table-3 disk-byte accounting — are bit-for-bit
-identical at every depth.
+identical at every depth.  (Multi-device engines keep that property per
+device: ``ShardedVSWEngine`` runs one pipeline instance — a prefetch LANE —
+per device over that device's slice of the schedule, each feeding its own
+cache partition, with per-lane ``stats`` summing to the engine aggregates.)
 
 ``stats`` separates the two sides of the overlap: ``stall_seconds`` is time
 the consumer spent blocked waiting on the queue (what prefetch is supposed

@@ -25,9 +25,32 @@ import dataclasses
 import math
 from typing import Any, Mapping
 
+import numpy as np
+
 import repro._compat  # noqa: F401  (jax.shard_map/AxisType aliases)
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_data_mesh(num_devices: int, axis: str = "data") -> Mesh:
+    """1-D mesh over the first ``num_devices`` local devices.
+
+    The graph engines (``repro.core.distributed``) partition destination
+    intervals over this single axis; the model stack builds its own 2-D
+    meshes via ``make_rules``.  Raises with the CPU-emulation hint when the
+    process has fewer devices than requested (jax locks the device count at
+    first init, so the flag must be set before importing jax).
+    """
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    devices = jax.devices()
+    if num_devices > len(devices):
+        raise RuntimeError(
+            f"num_devices={num_devices} but only {len(devices)} jax "
+            f"device(s) are visible; on CPU launch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_devices} "
+            f"(set before jax initializes)")
+    return Mesh(np.asarray(devices[:num_devices]), (axis,))
 
 # a rule value: one mesh axis name, a tuple of them (e.g. ('pod', 'data')),
 # or None for replicated

@@ -1,8 +1,16 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the device
-# count on first init).  This module is the ONLY place that forces 512
-# placeholder devices — tests and benches see the real device count.
+
+_DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count"
+_existing_xla_flags = os.environ.get("XLA_FLAGS", "")
+if _DEVICE_COUNT_FLAG not in _existing_xla_flags:
+    os.environ["XLA_FLAGS"] = (
+        (_existing_xla_flags + " " if _existing_xla_flags else "")
+        + f"{_DEVICE_COUNT_FLAG}=512")
+# The lines above MUST run before any other import (jax locks the device count
+# on first init).  This module is the ONLY place that forces 512 placeholder
+# devices — tests and benches see the real device count.  User- or CI-provided
+# XLA_FLAGS are APPENDED to, never overwritten, and an existing device-count
+# flag (e.g. a multi-device CI leg) always wins.
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 

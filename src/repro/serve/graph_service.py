@@ -20,7 +20,9 @@ independent client requests into those K-column sweeps:
 * Batches execute on a runner pool (``max_inflight`` concurrent sweeps)
   against ONE shared ``GraphSession`` — one compressed cache, one prefetch
   pipeline, engines shared by ``jit_signature`` so a stream of distinct
-  source sets never recompiles.
+  source sets never recompiles.  The session's ``num_devices`` setting is
+  transparent here: a multi-device session serves the same API with each
+  sweep sharded over the mesh (engine routing happens in the session).
 * Non-batchable apps (global pagerank, cc) coalesce by exact identity:
   duplicate in-flight requests share a single engine run.
 * A small memo layer keyed on (app, params, graph token — the store's

@@ -33,6 +33,17 @@ SpMV:
     with GraphSession(store_path, backend="packed", prefetch_depth=2) as s:
         pr = s.run("pagerank", max_iters=30)
 
+Multi-device: ``num_devices=N`` (env ``GRAPHMP_DEVICES``) makes every run
+drive N local jax devices per edge sweep — the session builds a
+``PartitionedShardCache`` (per-device slices of the one budget) and routes
+engines to ``repro.core.distributed.ShardedVSWEngine``; results are
+bitwise-identical to ``num_devices=1`` and the whole API above is
+unchanged (on CPU, set ``XLA_FLAGS=--xla_force_host_platform_device_count``
+before jax initializes):
+
+    with GraphSession(store_path, num_devices=8, prefetch_depth=2) as s:
+        pr = s.run("pagerank", max_iters=30)   # 8 shards folded per wave
+
 Applications dispatch through the ``@register_app`` registry
 (core/apps.py) by name, or a ``VertexProgram`` can be passed directly.
 ``run_many`` batches several applications; ``iter_run`` yields an
@@ -67,7 +78,7 @@ from pathlib import Path
 
 from repro.core.apps import (BatchedVertexProgram, VertexProgram, get_app,
                              is_incremental)
-from repro.core.cache import CompressedShardCache
+from repro.core.cache import CompressedShardCache, PartitionedShardCache
 from repro.core.engine import (BatchRunResult, EngineConfig, IterationStats,
                                RunResult, VSWEngine, _store_epoch)
 from repro.graph.source import ShardSource, path_mtime_ns
@@ -179,11 +190,26 @@ class GraphSession:
             config = config.replace(**overrides)
         self.store = store
         self.config = config
-        self.cache = CompressedShardCache(
-            store, mode=config.cache_mode,
-            budget_bytes=config.cache_budget_bytes,
-            hot_fraction=config.cache_hot_fraction,
-            promote_after=config.cache_promote_after)
+        if config.num_devices > 1:
+            # multi-device sessions partition the ONE edge cache by shard
+            # owner: each device's shards hash into its own
+            # CompressedShardCache slice, all under the same global budget
+            from repro.core.distributed import assign_shards
+            owner, _ = assign_shards(
+                np.asarray(store.intervals),
+                [int(m.get("nnz", 0)) for m in store.properties["shards"]],
+                config.num_devices)
+            self.cache = PartitionedShardCache(
+                store, owner, config.num_devices, mode=config.cache_mode,
+                budget_bytes=config.cache_budget_bytes,
+                hot_fraction=config.cache_hot_fraction,
+                promote_after=config.cache_promote_after)
+        else:
+            self.cache = CompressedShardCache(
+                store, mode=config.cache_mode,
+                budget_bytes=config.cache_budget_bytes,
+                hot_fraction=config.cache_hot_fraction,
+                promote_after=config.cache_promote_after)
         # graph epoch the shared arrays below were read at; engines inherit
         # it and re-sync per run when a mutable store moves past it
         self._graph_epoch = _store_epoch(store)
@@ -260,7 +286,13 @@ class GraphSession:
         with self._engines_lock:
             eng = self._engines.get(key)
             if eng is None:
-                eng = VSWEngine.from_session(self, program, config)
+                cls = VSWEngine
+                if (config or self.config).num_devices > 1:
+                    # transparent multi-device routing: same run/run_batch/
+                    # iter_run surface, N devices per edge sweep
+                    from repro.core.distributed import ShardedVSWEngine
+                    cls = ShardedVSWEngine
+                eng = cls.from_session(self, program, config)
                 if prog_key[0] == "prog":
                     # a raw-id key must keep the program alive to stay unique
                     eng._keyed_program = program

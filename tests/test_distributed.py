@@ -70,6 +70,90 @@ def test_distributed_vsw_pagerank_8dev():
     assert "OK" in out
 
 
+def test_distributed_vsw_non_divisible_n():
+    """Regression: n not divisible by the device count.  partition_for_mesh
+    pads the intervals; the padding rows must not absorb PageRank mass,
+    join the CC label space, or be counted as changed vertices."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.graph.generate import rmat_edges, materialize
+        from repro.core.distributed import partition_for_mesh, DistributedVSW
+        from repro.core import apps
+
+        src, dst = materialize(rmat_edges(scale=9, edge_factor=8, seed=3))
+        n = 500  # 500 % 8 != 0
+        keep = (src < n) & (dst < n)
+        src, dst = src[keep], dst[keep]
+        mesh = jax.make_mesh((8,), ('data',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g = partition_for_mesh(src, dst, n, 8)
+        assert g.num_vertices == n, g.num_vertices
+        assert g.padded_num_vertices == 504, g.padded_num_vertices
+
+        vals, _ = DistributedVSW(g, apps.cc(), mesh).run(100)
+        assert vals.shape == (n,), vals.shape
+        ref = np.arange(n, dtype=np.float64)
+        for _ in range(200):
+            new = ref.copy(); np.minimum.at(new, dst, ref[src])
+            if (new == ref).all(): break
+            ref = new
+        assert (vals == ref).all(), 'cc: padding leaked into labels'
+
+        pr_vals, _ = DistributedVSW(g, apps.pagerank(), mesh).run(30)
+        out_deg = np.bincount(src, minlength=n)
+        pr = np.full(n, 1.0 / n)
+        for _ in range(30):
+            c = pr / np.maximum(out_deg, 1)
+            s = np.zeros_like(pr); np.add.at(s, dst, c[src])
+            pr = 0.15 / n + 0.85 * s
+        err = np.abs(pr_vals - pr).max()
+        assert err < 1e-5, f'pagerank: padding absorbed mass ({err})'
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_distributed_vsw_honors_config():
+    """EngineConfig fields the prototype supports must be honored (not
+    silently dropped), and the replicated-Bloom selective schedule must
+    keep SSSP exact while devices get skipped."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.graph.generate import rmat_edges, materialize
+        from repro.core.distributed import partition_for_mesh, DistributedVSW
+        from repro.core import apps
+        from repro.core.engine import EngineConfig
+
+        src, dst = materialize(rmat_edges(scale=9, edge_factor=8, seed=11))
+        n = 500
+        keep = (src < n) & (dst < n)
+        src, dst = src[keep], dst[keep]
+        mesh = jax.make_mesh((8,), ('data',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g = partition_for_mesh(src, dst, n, 8)
+        assert len(g.blooms) == 8
+
+        cfg = EngineConfig(use_pallas=False, selective_threshold=0.5)
+        eng = DistributedVSW(g, apps.sssp(source=3), mesh, config=cfg)
+        assert eng.use_pallas is False
+        assert eng.selective_threshold == 0.5
+        # threshold 0.5 forces Bloom probing from the 1-vertex frontier on
+        flags = eng._schedule_flags(np.array([3]), 1.0 / n)
+        assert flags.dtype == bool and flags.shape == (8,)
+        dist, _ = eng.run(100)
+
+        init = np.full(n, np.inf); init[3] = 0.0
+        ref = init.copy()
+        for _ in range(200):
+            new = ref.copy(); np.minimum.at(new, dst, ref[src] + 1.0)
+            if (new == ref).all(): break
+            ref = new
+        assert np.array_equal(dist, ref.astype(np.float32)), 'sssp mismatch'
+        print('OK')
+    """)
+    assert "OK" in out
+
+
 def test_spmv_2d_partition():
     out = run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
@@ -100,6 +184,41 @@ def test_spmv_2d_partition():
                 want[d] += np.asarray(seg)
         got = np.asarray(out).reshape(D, R)
         np.testing.assert_allclose(got, want, rtol=1e-5)
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_spmv_2d_min_semiring():
+    """min_plus over the 2-D partition: the cross-src-block combine is a
+    pmin (all_gather + fold), not a psum — must match the elementwise min
+    of per-block single-device SpMVs EXACTLY (min never rounds)."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed import spmv_2d
+        from repro.kernels.spmv import ref
+
+        mesh = jax.make_mesh((2, 2), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        rng = np.random.default_rng(1)
+        D, S, R, W, nloc = 2, 2, 16, 128, 48  # nloc deliberately unaligned
+        n = S * nloc
+        cols = rng.integers(-1, nloc, size=(D, S, R, W)).astype(np.int32)
+        vals = rng.random((D, S, R, W)).astype(np.float32)
+        row_map = np.sort(rng.integers(0, R, size=(D, S, R)), -1).astype(np.int32)
+        x = rng.random(n).astype(np.float32)
+        out = spmv_2d(jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+                      jnp.asarray(row_map), 'min_plus', mesh)
+        want = np.full((D, R), np.inf, np.float32)
+        for d in range(D):
+            for s in range(S):
+                xb = x[s*nloc:(s+1)*nloc]
+                seg = ref.ell_spmv_ref(jnp.asarray(xb), jnp.asarray(cols[d, s]),
+                                       jnp.asarray(vals[d, s]),
+                                       jnp.asarray(row_map[d, s]), R, 'min_plus')
+                want[d] = np.minimum(want[d], np.asarray(seg))
+        got = np.asarray(out).reshape(D, R)
+        assert np.array_equal(got, want), np.abs(got - want).max()
         print('OK')
     """)
     assert "OK" in out
