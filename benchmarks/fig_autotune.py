@@ -1,0 +1,133 @@
+"""Static vs adaptive batching policy on the committed load trace.
+
+The claim under measurement (ISSUE 8 acceptance): replaying
+``benchmarks/traces/mini_mixed.jsonl`` — ~6 s of open-loop Poisson bfs+sssp
+traffic with a 3x burst through the middle third — the SLO-aware
+``AdaptiveServeController`` must meet or beat the BEST static
+``ServiceConfig`` on p99 latency at equal-or-better throughput, without
+being told where the trade-off lives.
+
+The static ladder spans the straggler-window trade-off the controller has
+to discover at runtime:
+
+* ``tight``  (0.5 ms) — latency-greedy: near-empty batches, so the burst
+  saturates the runners and queueing delay blows the tail up;
+* ``mid``    (8 ms)   — a hand-picked compromise (the "best static" in
+  practice — exactly what an operator would have to find by sweeping);
+* ``wide``   (40 ms)  — occupancy-greedy: every off-burst request eats the
+  window as pure added latency.
+
+The adaptive run STARTS at the wide config: converging down to (or past)
+``mid``'s tail latency is the controller earning its keep.  Latencies are
+exact nearest-rank percentiles measured from intended arrival times (the
+replay harness's own list, not the serving reservoirs), and every run
+reports its ``result_digest`` — identical digests across policies double-
+check that policy only moves WHEN work happens, never what it computes.
+
+Every policy is replayed ``REPS`` times and compared on MEDIAN p99/qps —
+a ~220-request open-loop trace puts p99 three samples from the max, so a
+single draw on a shared machine is a coin flip (observed spread on one
+box: the same mid config drew 210 ms and 1326 ms back to back).
+
+Acceptance (asserted): adaptive median p99 <= 1.10x best-static median
+p99 AND adaptive median qps >= 0.95x best-static median qps AND every
+adaptive rep converged with no controller errors.  (The 10%/5% slack
+absorbs residual noise; the committed PR-description run shows the real
+margins.)
+"""
+from __future__ import annotations
+
+import statistics
+from pathlib import Path
+
+from benchmarks.common import row
+from repro.obs import LoadTrace
+from repro.serve.bench import ServiceConfig, prepare_store, replay_trace
+from repro.session import GraphSession
+
+TRACE = Path(__file__).parent / "traces" / "mini_mixed.jsonl"
+SLO_P99_MS = 60.0
+REPS = 3
+STATICS = (
+    ("tight", ServiceConfig(max_batch=16, max_wait_ms=0.5, max_inflight=2,
+                            memoize=False)),
+    ("mid", ServiceConfig(max_batch=16, max_wait_ms=8.0, max_inflight=2,
+                          memoize=False)),
+    ("wide", ServiceConfig(max_batch=16, max_wait_ms=40.0, max_inflight=2,
+                           memoize=False)),
+)
+
+
+def _fmt(r: dict) -> str:
+    return (f"qps={r['qps']:.2f};p50_ms={r['p50_ms']:.1f};"
+            f"p99_ms={r['p99_ms']:.1f};occ={r['mean_occupancy']:.2f};"
+            f"max_batch={r['max_batch']};max_wait_ms={r['max_wait_ms']:.2f}")
+
+
+def _replay(store, trace, cfg, adaptive: bool) -> dict:
+    # fresh session per rep: no policy run inherits another's warm cache
+    with GraphSession(store) as session:
+        return replay_trace(
+            session, trace, cfg, adaptive=adaptive, slo_p99_ms=SLO_P99_MS,
+            controller_interval_s=0.25)
+
+
+def run() -> list[str]:
+    out = []
+    trace = LoadTrace.load(TRACE)
+    store_meta = trace.meta.get("store", {})
+    store = prepare_store(scale=store_meta.get("scale", 10),
+                          edge_factor=store_meta.get("edge_factor", 8))
+    reps: dict[str, list[dict]] = {}
+    digests = set()
+    # adaptive starts from the WIDE (worst-tail) static and must find its
+    # own way down; same trace for every rep of every policy
+    policies = [(f"static_{name}", cfg, False) for name, cfg in STATICS]
+    policies.append(("adaptive", STATICS[-1][1], True))
+    for name, cfg, adaptive in policies:
+        for i in range(REPS):
+            r = _replay(store, trace, cfg, adaptive)
+            reps.setdefault(name, []).append(r)
+            digests.add(r["result_digest"])
+            derived = _fmt(r)
+            if adaptive:
+                derived += (f";adjustments={r['adjustments']}"
+                            f";converged={r['converged']}")
+            out.append(row(f"fig_autotune_{name}_rep{i}",
+                           r["wall_seconds"] * 1e6, derived))
+
+    med = {name: {k: statistics.median(r[k] for r in rs)
+                  for k in ("p50_ms", "p99_ms", "qps", "mean_occupancy")}
+           for name, rs in reps.items()}
+    for name in med:
+        m = med[name]
+        out.append(row(f"fig_autotune_{name}_median", 0.0,
+                       f"p50_ms={m['p50_ms']:.1f};p99_ms={m['p99_ms']:.1f};"
+                       f"qps={m['qps']:.2f};occ={m['mean_occupancy']:.2f}"))
+    best_name = min((n for n in med if n != "adaptive"),
+                    key=lambda n: med[n]["p99_ms"])
+    best, adaptive_med = med[best_name], med["adaptive"]
+    out.append(row("fig_autotune_best_static", 0.0,
+                   f"name={best_name};p99_ms={best['p99_ms']:.1f};"
+                   f"qps={best['qps']:.2f}"))
+
+    # every replay of every policy must compute the SAME answers
+    assert len(digests) == 1, (
+        f"policies produced different results: {digests} — batching policy "
+        "may never change WHAT gets computed")
+    for name, rs in reps.items():
+        for r in rs:
+            assert r["failed"] == 0 and r["rejected"] == 0, (
+                f"{name}: {r['failed']} failed / {r['rejected']} rejected")
+    for r in reps["adaptive"]:
+        assert r["converged"] and not r["controller_error"], (
+            f"controller did not converge cleanly: {r}")
+    # the acceptance bar: adaptive meets-or-beats the best static on median
+    # p99 at equal-or-better median qps
+    assert adaptive_med["p99_ms"] <= best["p99_ms"] * 1.10, (
+        f"adaptive median p99 {adaptive_med['p99_ms']:.1f}ms vs best static "
+        f"({best_name}) {best['p99_ms']:.1f}ms — must meet or beat")
+    assert adaptive_med["qps"] >= best["qps"] * 0.95, (
+        f"adaptive median qps {adaptive_med['qps']:.2f} vs best static "
+        f"({best_name}) {best['qps']:.2f} — must not trade throughput away")
+    return out

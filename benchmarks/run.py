@@ -8,7 +8,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig7_selective, fig8_cache_modes, fig10_inmemory,
-                            fig_batch_frontiers, fig_cache_tiers,
+                            fig_autotune, fig_batch_frontiers, fig_cache_tiers,
                             fig_delta_incremental, fig_multidevice,
                             fig_pipeline_overlap, fig_serve_throughput,
                             grad_compression, kernel_spmv, roofline_report,
@@ -28,6 +28,7 @@ def main() -> None:
         ("fig_multidevice", fig_multidevice),
         ("fig_serve_throughput", fig_serve_throughput),
         ("fig_delta_incremental", fig_delta_incremental),
+        ("fig_autotune", fig_autotune),
         ("kernel_spmv", kernel_spmv),
         ("grad_compression", grad_compression),
         ("roofline_report", roofline_report),

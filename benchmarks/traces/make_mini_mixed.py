@@ -1,0 +1,42 @@
+"""Regenerate benchmarks/traces/mini_mixed.jsonl (committed load trace).
+
+The committed trace is the fixed traffic every policy comparison runs
+against (fig_autotune.py, the CI autotune job, tests/test_trace.py), so it
+is checked in rather than synthesized on the fly — a generator tweak must
+show up as a trace diff, not silently move the goalposts.
+
+Shape: ~6 s of Poisson arrivals at 25 qps base with a 3x burst through the
+middle third (75 qps), 3:1 cheap-bfs:sssp mix over the scale-10 bench
+graph (``prepare_store(scale=10)``, 1024 vertices).  Both apps are exact
+min-propagation families, so replays resolve bitwise-identically however
+the policy coalesces them — the determinism acceptance bar depends on
+this; do NOT add ppr/pagerank events here.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/traces/make_mini_mixed.py
+"""
+from pathlib import Path
+
+SCALE = 10
+EDGE_FACTOR = 8
+QPS = 25.0
+DURATION_S = 6.0
+SEED = 42
+
+
+def main() -> None:
+    from repro.obs import LoadTrace
+
+    trace = LoadTrace.synthesize(
+        duration_s=DURATION_S, qps=QPS, mix={"bfs": 3.0, "sssp": 1.0},
+        num_vertices=1 << SCALE, seed=SEED, max_iters=32,
+        burst=(DURATION_S / 3, 2 * DURATION_S / 3, 3.0))
+    trace.meta["store"] = {"scale": SCALE, "edge_factor": EDGE_FACTOR}
+    out = trace.save(Path(__file__).parent / "mini_mixed.jsonl")
+    print(f"{out}: {len(trace)} events over {trace.duration:.2f}s "
+          f"({trace.mean_qps():.1f} qps mean), mix {trace.apps()}")
+
+
+if __name__ == "__main__":
+    main()

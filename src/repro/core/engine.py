@@ -352,6 +352,7 @@ class VSWEngine:
         out_deg_dev: jnp.ndarray | None = None,
         n_pad: int | None = None,
         graph_epoch: int | None = None,
+        observers: list | None = None,
         **legacy,
     ):
         if config is not None and not isinstance(config, EngineConfig):
@@ -377,6 +378,12 @@ class VSWEngine:
             budget_bytes=self.config.cache_budget_bytes,
             hot_fraction=self.config.cache_hot_fraction,
             promote_after=self.config.cache_promote_after)
+        # telemetry taps: callables invoked with each IterationStats as it
+        # is produced (GraphSession shares ONE list across all its engines,
+        # so a MetricsHub attached mid-flight sees every later iteration).
+        # Observer failures are swallowed — monitoring must never alter or
+        # abort a computation.
+        self.observers: list = observers if observers is not None else []
         self.selective_threshold = self.config.selective_threshold
         self.use_pallas = self.config.use_pallas
         self.preload = self.config.preload
@@ -431,6 +438,7 @@ class VSWEngine:
             out_deg_dev=session.out_deg_dev,
             n_pad=session.n_pad,
             graph_epoch=getattr(session, "_graph_epoch", None),
+            observers=getattr(session, "iteration_observers", None),
         )
 
     # ------------------------------------------------------------------
@@ -784,6 +792,11 @@ class VSWEngine:
                 **self._io_stats(marks),
             )
             history.append(stats)
+            for observe in tuple(self.observers):
+                try:
+                    observe(stats)
+                except Exception:
+                    pass  # telemetry must never abort a sweep
             if checkpoint_dir and checkpoint_every and (it + 1) % checkpoint_every == 0:
                 save_checkpoint(checkpoint_dir, np.asarray(src[: self.n]),
                                 changed, it + 1, col_iters=col_iters,

@@ -1,0 +1,32 @@
+"""GraphPulse: observability + self-tuning for the serving stack.
+
+Three pieces (see each module's docstring for the design):
+
+* ``repro.obs.metrics`` — bounded telemetry primitives (``Reservoir``
+  log-binned histograms with documented percentile error, ``MetricsHub``
+  registry + JSONL snapshot emitter, schema validation / CLI).
+* ``repro.obs.controller`` — ``AdaptiveServeController``, the SLO-aware
+  feedback loop steering ``GraphService.reconfigure``.
+* ``repro.obs.trace`` — ``LoadTrace`` record/replay format so policy
+  changes are benchmarked against recorded traffic.
+"""
+from repro.obs.controller import (AdaptiveServeController, ControllerConfig,
+                                  Decision)
+from repro.obs.metrics import (Counter, Gauge, MetricsHub, Reservoir,
+                               validate_file, validate_snapshot)
+from repro.obs.trace import LoadTrace, TraceEvent, TraceRecorder
+
+__all__ = [
+    "AdaptiveServeController",
+    "ControllerConfig",
+    "Counter",
+    "Decision",
+    "Gauge",
+    "LoadTrace",
+    "MetricsHub",
+    "Reservoir",
+    "TraceEvent",
+    "TraceRecorder",
+    "validate_file",
+    "validate_snapshot",
+]

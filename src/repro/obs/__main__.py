@@ -1,0 +1,4 @@
+"""``python -m repro.obs FILE...`` — validate metrics JSONL files."""
+from repro.obs.metrics import main
+
+raise SystemExit(main())

@@ -5,13 +5,20 @@ single-query submissions dynamically micro-batched onto one shared
 ``GraphSession``.  ``ServeEngine`` (engine.py) is the LLM serving engine
 kept from the seed code; it is imported lazily so graph serving does not
 pull the model stack in.
+
+Observability and self-tuning live in ``repro.obs`` (GraphPulse): attach a
+``MetricsHub`` via ``GraphService.attach_hub`` / ``GraphSession.attach_hub``
+and steer the batching policy with ``AdaptiveServeController`` through
+``GraphService.reconfigure``.
 """
 from repro.serve.graph_service import (AdmissionError, GraphService,
-                                       ServiceClosed, ServiceConfig,
-                                       ServiceStats, percentile)
+                                       MutationReport, ServiceClosed,
+                                       ServiceConfig, ServiceStats,
+                                       percentile)
 
-__all__ = ["AdmissionError", "GraphService", "ServiceClosed", "ServiceConfig",
-           "ServiceStats", "percentile", "ServeEngine"]
+__all__ = ["AdmissionError", "GraphService", "MutationReport",
+           "ServiceClosed", "ServiceConfig", "ServiceStats", "percentile",
+           "ServeEngine"]
 
 
 def __getattr__(name):

@@ -51,10 +51,9 @@ from collections import Counter, OrderedDict, deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from math import ceil
 
-import numpy as np
-
 from repro.core.apps import available_apps, batch_spec, is_incremental
 from repro.graph.source import graph_token
+from repro.obs.metrics import Reservoir
 
 
 class ServiceClosed(RuntimeError):
@@ -113,6 +112,19 @@ class ServiceConfig:
     max_iters:
         Default iteration cap applied when a request does not pass its own
         ``max_iters``.
+    fair_weights:
+        Per-app weights for the dispatcher's stride fair-share scheduler
+        (dict or pair-iterable; normalized to a sorted tuple).  Each
+        dispatched request charges its app ``1/weight`` of virtual time and
+        the dispatcher serves the READY group whose app is furthest behind
+        — so a flood of cheap BFS queries cannot starve a pending PPR
+        group past its wait deadline.  Unlisted apps weigh 1.0; None means
+        everyone weighs 1.0 (pure round-robin among ready groups).
+
+    ``max_batch``, ``max_wait_ms``, ``max_queue``, ``max_iters`` and
+    ``fair_weights`` are live-tunable via ``GraphService.reconfigure``
+    (the adaptive controller's write path); the rest are fixed at
+    construction (``max_inflight`` sizes a real thread pool).
     """
 
     max_batch: int = 16
@@ -125,6 +137,7 @@ class ServiceConfig:
     memo_budget_bytes: int = 1 << 28
     pad_batches: bool = True
     max_iters: int = 200
+    fair_weights: tuple | None = None
 
     def __post_init__(self):
         if not isinstance(self.max_batch, int) or self.max_batch < 1:
@@ -152,6 +165,23 @@ class ServiceConfig:
         if not isinstance(self.max_iters, int) or self.max_iters < 1:
             raise ValueError(f"max_iters must be an int >= 1, got "
                              f"{self.max_iters!r}")
+        if self.fair_weights is not None:
+            items = (self.fair_weights.items()
+                     if isinstance(self.fair_weights, dict)
+                     else self.fair_weights)
+            norm = tuple(sorted((str(app), float(w)) for app, w in items))
+            if any(w <= 0 for _, w in norm):
+                raise ValueError(f"fair_weights must be > 0, got "
+                                 f"{self.fair_weights!r}")
+            object.__setattr__(self, "fair_weights", norm)
+
+    def weight_for(self, app: str) -> float:
+        """Fair-share weight of ``app`` (1.0 unless listed)."""
+        if self.fair_weights is not None:
+            for name, w in self.fair_weights:
+                if name == app:
+                    return w
+        return 1.0
 
     def replace(self, **changes) -> "ServiceConfig":
         return dataclasses.replace(self, **changes)
@@ -185,22 +215,34 @@ class ServiceStats:
 
     ``snapshot()`` returns one self-consistent dict: request counts
     (submitted/completed/memo_hits/rejected/failed), current and peak queue
-    depth, p50/p95/p99/mean latency in milliseconds (nearest-rank, see
-    ``percentile``), the batch-occupancy histogram {K: batches executed
-    with K live columns}, and ``cache_served_fraction`` (memo hits over
-    completed requests).
+    depth, p50/p95/p99/mean latency in milliseconds, the batch-occupancy
+    histogram {K: batches executed with K live columns}, and
+    ``cache_served_fraction`` (memo hits over completed requests).
 
-    Latency percentiles cover the most recent ``latency_window`` completed
-    requests (a bounded deque — a long-lived daemon must not accumulate one
-    float per request forever); the counters are lifetime totals.
+    Latencies live in bounded log-binned reservoirs
+    (``repro.obs.metrics.Reservoir``) — one overall (``latency_hist``) plus
+    one per app, created lazily — NOT an ordered list: memory is O(#bins)
+    however long the service runs, percentile reads are O(#bins) however
+    much traffic arrived (a polling controller reads them every few hundred
+    ms), and bin-count snapshots subtract, giving rolling-window
+    percentiles for free.  The cost is a documented ~1% relative error on
+    quantiles (see ``Reservoir``; mean stays exact via sum/count, and the
+    regression test in tests/test_obs.py pins the error bound against the
+    exact nearest-rank ``percentile``).  Counters are lifetime totals.
+
+    ``attach_hub`` shares these same reservoirs with a ``MetricsHub`` (no
+    double recording) and registers a poller exporting the counters, so
+    every snapshot the hub emits carries the serving state.
     """
 
-    LATENCY_WINDOW = 65536
-
-    def __init__(self, latency_window: int = LATENCY_WINDOW):
+    def __init__(self):
         self._lock = threading.Lock()
-        # seconds, one per completed request, most recent window only
-        self._latencies: deque[float] = deque(maxlen=latency_window)
+        # seconds per completed request: one overall + one per app, all
+        # bounded reservoirs shared with any attached MetricsHub
+        self.latency_hist = Reservoir()
+        self._app_hists: dict[str, Reservoir] = {}
+        self._hub = None
+        self._hub_prefix = "serve"
         self.batch_occupancy: Counter = Counter()
         self.submitted = 0
         self.completed = 0
@@ -229,9 +271,12 @@ class ServiceStats:
         with self._lock:
             self.batch_occupancy[occupancy] += 1
 
-    def record_latency(self, seconds: float, memo_hit: bool = False) -> None:
+    def record_latency(self, seconds: float, memo_hit: bool = False,
+                       app: str | None = None) -> None:
+        self.latency_hist.observe(seconds)
+        if app is not None:
+            self._app_hist(app).observe(seconds)
         with self._lock:
-            self._latencies.append(float(seconds))
             self.completed += 1
             self.memo_hits += int(memo_hit)
 
@@ -239,15 +284,55 @@ class ServiceStats:
         with self._lock:
             self.failed += count
 
-    # -- reading ---------------------------------------------------------
-    def latency_ms(self, q: float) -> float:
+    def _app_hist(self, app: str) -> Reservoir:
         with self._lock:
-            lats = list(self._latencies)
-        return percentile(lats, q) * 1e3
+            h = self._app_hists.get(app)
+            if h is None:
+                h = self._app_hists[app] = Reservoir()
+                if self._hub is not None:
+                    self._hub.adopt_histogram(
+                        f"{self._hub_prefix}.latency_s.{app}", h)
+            return h
+
+    # -- telemetry wiring -------------------------------------------------
+    def attach_hub(self, hub, prefix: str = "serve") -> None:
+        """Share the latency reservoirs with ``hub`` (adopted, not copied)
+        and export the counters as a poller named ``prefix``."""
+        with self._lock:
+            self._hub = hub
+            self._hub_prefix = prefix
+            hub.adopt_histogram(f"{prefix}.latency_s", self.latency_hist)
+            for app, h in self._app_hists.items():
+                hub.adopt_histogram(f"{prefix}.latency_s.{app}", h)
+        hub.register_poller(prefix, self._poll)
+
+    def _poll(self) -> dict:
+        with self._lock:
+            occ = dict(self.batch_occupancy)
+            out = dict(
+                submitted=self.submitted, completed=self.completed,
+                memo_hits=self.memo_hits, rejected=self.rejected,
+                failed=self.failed, queue_depth=self.queue_depth,
+                queue_peak=self.queue_peak,
+            )
+        batches = sum(occ.values())
+        out["batches"] = batches
+        out["mean_occupancy"] = (sum(k * v for k, v in occ.items()) / batches
+                                 if batches else 0.0)
+        return out
+
+    # -- reading ---------------------------------------------------------
+    def occupancy(self) -> dict:
+        """Copy of the {K: batch count} occupancy histogram (the adaptive
+        controller diffs successive copies for per-window occupancy)."""
+        with self._lock:
+            return dict(self.batch_occupancy)
+
+    def latency_ms(self, q: float) -> float:
+        return self.latency_hist.quantile(q) * 1e3
 
     def snapshot(self) -> dict:
         with self._lock:
-            lats = list(self._latencies)
             occ = dict(sorted(self.batch_occupancy.items()))
             completed, memo = self.completed, self.memo_hits
             snap = dict(
@@ -255,12 +340,10 @@ class ServiceStats:
                 memo_hits=memo, rejected=self.rejected, failed=self.failed,
                 queue_depth=self.queue_depth, queue_peak=self.queue_peak,
             )
-        ordered = sorted(lats)  # sort once, rank three times
+        hist = self.latency_hist.to_dict(scale=1e3)
         snap.update(
-            p50_ms=_nearest_rank(ordered, 50) * 1e3,
-            p95_ms=_nearest_rank(ordered, 95) * 1e3,
-            p99_ms=_nearest_rank(ordered, 99) * 1e3,
-            mean_ms=float(np.mean(ordered)) * 1e3 if ordered else 0.0,
+            p50_ms=hist["p50"], p95_ms=hist["p95"], p99_ms=hist["p99"],
+            mean_ms=hist["mean"],
             batch_occupancy=occ,
             cache_served_fraction=memo / completed if completed else 0.0,
         )
@@ -318,6 +401,10 @@ class GraphService:
         # dispatcher's wait loop and full-group lookup stay O(#groups),
         # not O(queue length), under the lock submit() contends on
         self._pending_counts: Counter = Counter()
+        # stride fair-share state (dispatcher-side, guarded by _cond): per-
+        # app pass values + the virtual time new apps join at
+        self._app_pass: dict[str, float] = {}
+        self._vtime = 0.0
         self._closing = False
         self._closed = False
         # mutation barrier: while True the dispatcher launches no new
@@ -397,7 +484,7 @@ class GraphService:
                     future.set_result(hit[0])
                     self.stats.record_submitted(len(self._pending))
                     self.stats.record_latency(time.perf_counter() - t0,
-                                              memo_hit=True)
+                                              memo_hit=True, app=app)
                     return future
             if len(self._pending) >= self.config.max_queue:
                 self.stats.record_rejected()
@@ -419,7 +506,8 @@ class GraphService:
 
     # ------------------------------------------------------------------
     def _dispatch_loop(self) -> None:
-        cfg = self.config
+        # NOTE: self.config is re-read every pass (reconfigure() swaps the
+        # frozen config object and notifies) — never cached across waits
         while True:
             with self._cond:
                 # a mutation barrier (_paused) parks the dispatcher even
@@ -429,27 +517,18 @@ class GraphService:
                     self._cond.wait()
                 if not self._pending:
                     return  # closing and drained
-                head = self._pending[0]
-                # dynamic batching: hold the head's group open for
-                # stragglers until max_wait_ms after ITS admission —
-                # bounded added latency, whatever occupancy traffic allows.
-                # If ANY group fills to max_batch meanwhile, dispatch that
-                # one immediately instead of making a ready batch queue
-                # behind the head's straggler window (no head-of-line block)
-                deadline = head.t_submit + cfg.max_wait_ms / 1e3
-                while (not self._closing
-                       and self._pending_counts[head.group_key] < cfg.max_batch
-                       and self._full_group() is None):
-                    remaining = deadline - time.perf_counter()
-                    if remaining <= 0:
-                        break
-                    self._cond.wait(remaining)
-                    if not self._pending or self._pending[0] is not head:
-                        break  # group got dispatched or cancelled under us
-                if not self._pending:
+                cfg = self.config
+                now = time.perf_counter()
+                key = self._ready_group(cfg, now)
+                if key is None:
+                    # no group is full or past its straggler deadline: sleep
+                    # until the earliest deadline (or a submit/reconfigure/
+                    # close notification), then re-evaluate from scratch
+                    deadline = self._earliest_deadline(cfg)
+                    self._cond.wait(None if deadline is None
+                                    else max(deadline - now, 0.0))
                     continue
-                key = self._full_group() or self._pending[0].group_key
-                group = self._take_group(key)
+                group = self._take_group(key, cfg)
                 self.stats.record_dequeued(len(self._pending))
             if not group:
                 continue
@@ -468,22 +547,61 @@ class GraphService:
                     return
                 raise
 
-    def _full_group(self) -> tuple | None:
-        """A group key with max_batch requests pending, if any (O(#groups))."""
-        for key, count in self._pending_counts.items():
-            if count >= self.config.max_batch:
-                return key
-        return None
+    def _group_heads(self) -> dict:
+        """{group_key: oldest pending request} in one queue scan (the queue
+        is FIFO, so the first request seen per key is its oldest)."""
+        heads: dict[tuple, _Request] = {}
+        for r in self._pending:
+            if r.group_key not in heads:
+                heads[r.group_key] = r
+        return heads
 
-    def _take_group(self, key: tuple) -> list[_Request]:
-        """Pop up to max_batch requests sharing ``key`` (queue order).
+    def _ready_group(self, cfg: ServiceConfig, now: float) -> tuple | None:
+        """The group to dispatch now, or None to keep waiting.
+
+        A group is READY when it is full (max_batch pending), its oldest
+        request has waited max_wait_ms, or the service is closing (drain).
+        Among ready groups the pick is weighted fair-share, not FIFO: each
+        app carries a stride-scheduling pass value (advanced 1/weight per
+        dispatched request), and the ready group whose app is furthest
+        behind wins.  A flood of cheap BFS queries therefore keeps filling
+        batches — but every time it dispatches its pass advances, so a
+        ready PPR group's older pass takes the next slot: bounded bypass
+        instead of starvation (the old policy dispatched ANY full group
+        ahead of an expired head, indefinitely under flood).
+        """
+        best_key, best_pass = None, None
+        for key, head in self._group_heads().items():
+            ready = (self._closing
+                     or self._pending_counts[key] >= cfg.max_batch
+                     or now >= head.t_submit + cfg.max_wait_ms / 1e3)
+            if not ready:
+                continue
+            app_pass = self._app_pass.get(head.app, self._vtime)
+            if best_pass is None or app_pass < best_pass:
+                best_key, best_pass = key, app_pass
+        if best_key is not None:
+            # advance virtual time to the winner so newly-seen apps start
+            # here, not at 0 (no retroactive credit for late arrivals)
+            self._vtime = max(self._vtime, best_pass)
+        return best_key
+
+    def _earliest_deadline(self, cfg: ServiceConfig) -> float | None:
+        heads = self._group_heads()
+        if not heads:
+            return None
+        return min(h.t_submit for h in heads.values()) + cfg.max_wait_ms / 1e3
+
+    def _take_group(self, key: tuple, cfg: ServiceConfig) -> list[_Request]:
+        """Pop up to max_batch requests sharing ``key`` (queue order) and
+        charge their apps' fair-share passes.
 
         Marks each taken future running (``set_running_or_notify_cancel``),
         which both drops client-cancelled requests and makes the later
         ``set_result`` race-free against ``Future.cancel``."""
         group, rest = [], deque()
         for r in self._pending:
-            if r.group_key == key and len(group) < self.config.max_batch:
+            if r.group_key == key and len(group) < cfg.max_batch:
                 self._pending_counts[key] -= 1
                 if r.future.set_running_or_notify_cancel():
                     group.append(r)
@@ -492,6 +610,12 @@ class GraphService:
         if self._pending_counts[key] <= 0:
             del self._pending_counts[key]
         self._pending = rest
+        for r in group:
+            # stride accounting: 1/weight virtual time per request, floored
+            # at current vtime so an app idle for an hour does not bank an
+            # hour of priority credit
+            base = max(self._app_pass.get(r.app, self._vtime), self._vtime)
+            self._app_pass[r.app] = base + 1.0 / cfg.weight_for(r.app)
         return group
 
     # ------------------------------------------------------------------
@@ -539,12 +663,12 @@ class GraphService:
 
     def _resolve(self, group: list[_Request], results) -> None:
         now = time.perf_counter()
-        memo_items = []
-        for r, res in zip(group, results):
-            r.future.set_result(res)
-            self.stats.record_latency(now - r.t_submit)
-            if r.memo_key is not None:
-                memo_items.append((r.memo_key, res))
+        pairs = list(zip(group, results))
+        # memoize BEFORE resolving: a client that has seen result() must be
+        # able to resubmit the same query and hit the memo — resolving first
+        # races its next submit against this insertion
+        memo_items = [(r.memo_key, res) for r, res in pairs
+                      if r.memo_key is not None]
         if memo_items and self.config.memo_capacity \
                 and self.config.memo_budget_bytes:
             with self._cond:
@@ -561,6 +685,11 @@ class GraphService:
                         or self._memo_bytes > self.config.memo_budget_bytes:
                     _, (_, dropped) = self._memo.popitem(last=False)
                     self._memo_bytes -= dropped
+        for r, res in pairs:
+            # stats before set_result: a client that has seen result() must
+            # also see its completion counted in the very next snapshot
+            self.stats.record_latency(now - r.t_submit, app=r.app)
+            r.future.set_result(res)
 
     # ------------------------------------------------------------------
     def apply_mutations(self, inserts=None, deletes=None, updates=None, *,
@@ -685,6 +814,54 @@ class GraphService:
     def queue_depth(self) -> int:
         with self._lock:
             return len(self._pending)
+
+    @property
+    def is_closed(self) -> bool:
+        """True once close() has begun — submit/reconfigure will raise."""
+        with self._lock:
+            return self._closing
+
+    # ------------------------------------------------------------------
+    RECONFIGURABLE = frozenset(
+        {"max_batch", "max_wait_ms", "max_queue", "max_iters",
+         "fair_weights"})
+
+    def reconfigure(self, **changes) -> ServiceConfig:
+        """Atomically retune the live batching policy; returns the new
+        config.  This is ``AdaptiveServeController``'s write path, and it
+        is safe mid-traffic: the dispatcher re-reads ``self.config`` on
+        every pass, pending requests simply see the new limits on their
+        next evaluation, and in-flight sweeps are untouched.
+
+        Only ``RECONFIGURABLE`` fields may change (``max_inflight`` sizes
+        a real thread pool, the memo knobs shape already-held state —
+        restart for those); values are validated exactly like construction
+        (``ServiceConfig.__post_init__``).  Raises ``ServiceClosed`` on a
+        closed/closing service so a racing controller loop stops cleanly
+        instead of resurrecting knobs on a corpse.
+        """
+        unknown = set(changes) - self.RECONFIGURABLE
+        if unknown:
+            raise ValueError(
+                f"not reconfigurable at runtime: {sorted(unknown)} "
+                f"(allowed: {sorted(self.RECONFIGURABLE)})")
+        with self._cond:
+            if self._closing:
+                raise ServiceClosed("cannot reconfigure a closed "
+                                    "GraphService")
+            self.config = self.config.replace(**changes)
+            # wake the dispatcher: a shorter max_wait_ms or smaller
+            # max_batch can make a parked group ready right now
+            self._cond.notify_all()
+            return self.config
+
+    def attach_hub(self, hub, prefix: str = "serve"):
+        """Wire this service's stats into a ``MetricsHub``: the latency
+        reservoirs are shared (adopted) and the counters exported as a
+        poller, so every emitted snapshot carries serving state.  Returns
+        ``hub`` for chaining."""
+        self.stats.attach_hub(hub, prefix)
+        return hub
 
     def close(self, drain: bool = True, timeout: float | None = None) -> None:
         """Stop accepting work and shut down.

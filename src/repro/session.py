@@ -235,6 +235,11 @@ class GraphSession:
         # combined [n, K] result of the most recent run_batch (survives
         # engine-cache eviction, unlike engine(...).last_result)
         self.last_batch_result: BatchRunResult | None = None
+        # telemetry taps shared (by reference) with every engine this
+        # session builds: each entry is called with every IterationStats as
+        # sweeps produce them.  Appending here — e.g. via attach_hub — is
+        # seen by engines built BEFORE the append too (same list object).
+        self.iteration_observers: list = []
 
     # -- engine construction / reuse ------------------------------------
     def _resolve(self, app, app_kwargs) -> tuple[VertexProgram, object]:
@@ -606,6 +611,51 @@ class GraphSession:
         skipped) and the achieved compression ratio.  All values are
         self-consistent (taken under the cache lock)."""
         return self.cache.report()
+
+    def attach_hub(self, hub, prefix: str = "session"):
+        """Wire this session's telemetry into a ``repro.obs.MetricsHub``:
+
+        * ``{prefix}.cache.*`` — a poller over ``cache_report()`` (numeric
+          leaves flattened into gauges at each hub sample: tier occupancy,
+          hit/miss/eviction counters, achieved compression ratio; the
+          partitioned cache's per-partition sub-reports flatten too);
+        * ``{prefix}.engine.*`` — an ``iteration_observers`` tap converting
+          every ``IterationStats`` into counters (iterations,
+          disk_bytes, edges_processed, stall/fetch/decode-saved seconds,
+          per-device ``engine.devN.*`` splits for sharded runs), gauges
+          (last active_ratio / cache_hit_ratio), and an
+          ``{prefix}.engine.iteration_s`` histogram of sweep durations.
+
+        Engines already built share the observer list by reference, so
+        attaching mid-flight captures every subsequent iteration.  Returns
+        ``hub`` for chaining.
+        """
+        hub.register_poller(f"{prefix}.cache", self.cache_report)
+        iter_hist = hub.histogram(f"{prefix}.engine.iteration_s")
+        eng = f"{prefix}.engine"
+
+        def observe(stats) -> None:
+            hub.counter(f"{eng}.iterations").inc()
+            hub.counter(f"{eng}.disk_bytes").inc(stats.disk_bytes)
+            hub.counter(f"{eng}.edges_processed").inc(stats.edges_processed)
+            hub.counter(f"{eng}.shards_processed").inc(stats.shards_processed)
+            hub.counter(f"{eng}.shards_skipped").inc(stats.shards_skipped)
+            hub.counter(f"{eng}.stall_seconds").inc(stats.stall_seconds)
+            hub.counter(f"{eng}.fetch_seconds").inc(stats.fetch_seconds)
+            hub.counter(f"{eng}.decode_seconds_saved").inc(
+                stats.decode_seconds_saved)
+            hub.gauge(f"{eng}.active_ratio").set(stats.active_ratio)
+            hub.gauge(f"{eng}.cache_hit_ratio").set(stats.cache_hit_ratio)
+            iter_hist.observe(stats.seconds)
+            for d, (db, ds, df) in enumerate(zip(stats.device_disk_bytes,
+                                                 stats.device_stall_seconds,
+                                                 stats.device_fetch_seconds)):
+                hub.counter(f"{eng}.dev{d}.disk_bytes").inc(db)
+                hub.counter(f"{eng}.dev{d}.stall_seconds").inc(ds)
+                hub.counter(f"{eng}.dev{d}.fetch_seconds").inc(df)
+
+        self.iteration_observers.append(observe)
+        return hub
 
     def warm(self) -> int:
         """Pull every shard through the cache once (prefetch); returns the

@@ -1,0 +1,246 @@
+"""GraphPulse telemetry primitives: Reservoir error bound, MetricsHub
+wiring, snapshot schema, and the JSONL emitter.
+
+The load-bearing regression here is the Reservoir's documented quantile
+error: every percentile the serving layer now reports (ServiceStats,
+controller windows, emitted snapshots) comes from log-binned reservoirs,
+so the ``sqrt(growth) - 1`` relative-error bound against exact
+nearest-rank percentiles is the contract the rest of the system leans on.
+"""
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import (Counter, Gauge, MetricsHub, Reservoir,
+                               main, validate_file, validate_snapshot)
+from repro.serve.graph_service import percentile
+
+
+# ---------------------------------------------------------------------------
+# Reservoir: the documented error bound, pinned
+# ---------------------------------------------------------------------------
+def test_reservoir_quantile_error_vs_exact_nearest_rank():
+    """Relative quantile error <= sqrt(growth) - 1 on heavy-tailed data,
+    at every quantile the system reports — the documented contract."""
+    rng = np.random.RandomState(7)
+    samples = np.exp(rng.normal(-3.5, 1.2, size=5000))  # latency-ish, sec
+    res = Reservoir()
+    for s in samples:
+        res.observe(float(s))
+    bound = math.sqrt(res.growth) - 1.0
+    ordered = sorted(samples.tolist())
+    for q in (10, 50, 90, 95, 99, 99.9):
+        exact = percentile(ordered, q)
+        approx = res.quantile(q)
+        rel = abs(approx - exact) / exact
+        assert rel <= bound, f"p{q}: {approx} vs exact {exact}, rel {rel}"
+
+
+def test_reservoir_exact_moments_and_edges():
+    res = Reservoir(min_value=1e-3, max_value=10.0, growth=1.05)
+    vals = [0.0, 5e-4, 0.002, 0.5, 2.0, 50.0]  # under-, in-, over-range
+    for v in vals:
+        res.observe(v)
+    assert res.count == len(vals)
+    assert res.sum == pytest.approx(sum(vals))
+    assert res.min == 0.0 and res.max == 50.0
+    assert res.mean == pytest.approx(sum(vals) / len(vals))
+    # under-range values report min_value (absolute error <= min_value)
+    assert res.quantile(1) == res.min_value
+    # over-range values clamp to max_value, never invent a larger number
+    assert res.quantile(100) == res.max_value
+
+
+def test_reservoir_windowed_quantile_from_counts_delta():
+    """Subtracting two counts() snapshots yields the percentile of ONLY
+    the observations in between — the controller's rolling window."""
+    res = Reservoir()
+    for _ in range(100):
+        res.observe(0.001)
+    before = res.counts()
+    for _ in range(50):
+        res.observe(1.0)
+    delta = res.counts() - before
+    assert int(delta.sum()) == 50
+    # the window contains only ~1.0s observations; lifetime p50 is 1 ms
+    assert res.quantile(50, counts=delta) == pytest.approx(1.0, rel=0.02)
+    assert res.quantile(50) == pytest.approx(0.001, rel=0.02)
+
+
+def test_reservoir_empty_and_validation():
+    res = Reservoir()
+    assert res.quantile(99) == 0.0
+    assert res.count == 0 and res.mean == 0.0
+    with pytest.raises(ValueError):
+        res.quantile(0)
+    with pytest.raises(ValueError):
+        res.quantile(101)
+    with pytest.raises(ValueError):
+        Reservoir(min_value=0.0)
+    with pytest.raises(ValueError):
+        Reservoir(min_value=2.0, max_value=1.0)
+    with pytest.raises(ValueError):
+        Reservoir(growth=1.0)
+
+
+def test_reservoir_thread_safety_exact_count():
+    res = Reservoir()
+
+    def worker(k):
+        for i in range(1000):
+            res.observe(1e-3 * (k + 1) + 1e-6 * i)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert res.count == 8000
+
+
+# ---------------------------------------------------------------------------
+# Counter / Gauge
+# ---------------------------------------------------------------------------
+def test_counter_monotone_and_gauge_last_wins():
+    c = Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.value == pytest.approx(3.5)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = Gauge()
+    g.set(4)
+    g.set(1.5)
+    assert g.value == 1.5
+
+
+# ---------------------------------------------------------------------------
+# MetricsHub: registry, pollers, snapshots, timeseries
+# ---------------------------------------------------------------------------
+def test_hub_registry_get_or_create_and_adoption():
+    hub = MetricsHub()
+    assert hub.counter("a") is hub.counter("a")
+    assert hub.gauge("b") is hub.gauge("b")
+    assert hub.histogram("h") is hub.histogram("h")
+    shared = Reservoir()
+    shared.observe(0.25)
+    assert hub.adopt_histogram("h", shared) is shared
+    assert hub.histogram("h") is shared  # adoption replaced the original
+    snap = hub.sample()
+    assert snap["histograms"]["h"]["count"] == 1
+
+
+def test_hub_poller_flattening_and_dead_poller():
+    hub = MetricsHub()
+    hub.register_poller("cache", lambda: {
+        "hits": 10, "nested": {"ratio": 0.5, "deep": [1, 2]},
+        "mode": "zlib",        # string leaf: a label, skipped
+        "enabled": True,       # bool -> 1.0
+        "bad": float("nan"),   # non-finite: skipped
+    })
+    hub.register_poller("dead", lambda: 1 / 0)
+    snap = hub.sample()
+    g = snap["gauges"]
+    assert g["cache.hits"] == 10.0
+    assert g["cache.nested.ratio"] == 0.5
+    assert g["cache.nested.deep.0"] == 1.0 and g["cache.nested.deep.1"] == 2.0
+    assert g["cache.enabled"] == 1.0
+    assert "cache.mode" not in g and "cache.bad" not in g
+    assert not any(k.startswith("dead") for k in g)  # dead poller ignored
+    validate_snapshot(snap)
+    hub.unregister_poller("cache")
+    assert "cache.hits" not in hub.sample()["gauges"]
+
+
+def test_hub_sample_schema_and_timeseries():
+    fake_now = [100.0]
+    hub = MetricsHub(retain=4, clock=lambda: fake_now[0])
+    hub.counter("reqs").inc(3)
+    hub.gauge("depth").set(7)
+    hub.histogram("lat").observe(0.5)
+    for i in range(6):  # more samples than the ring retains
+        fake_now[0] = 100.0 + i
+        validate_snapshot(hub.sample())
+    assert len(hub.snapshots) == 4  # bounded ring
+    ts = hub.timeseries("depth")
+    assert ts == [(2.0, 7.0), (3.0, 7.0), (4.0, 7.0), (5.0, 7.0)]
+    (t, h), *_ = hub.timeseries("lat")
+    assert h["count"] == 1 and h["p50"] == pytest.approx(0.5, rel=0.02)
+    assert hub.timeseries("nope") == []
+
+
+# ---------------------------------------------------------------------------
+# the emitter + schema validation on disk
+# ---------------------------------------------------------------------------
+def test_hub_emits_validating_jsonl(tmp_path):
+    path = tmp_path / "metrics.jsonl"
+    hub = MetricsHub(path, emit_interval=0.05)
+    hub.counter("serve.requests").inc(5)
+    hub.histogram("serve.latency_s").observe(0.01)
+    hub.emit()      # explicit emit
+    hub.close()     # close emits one final snapshot
+    hub.close()     # idempotent
+    hub.emit()      # after close: silently dropped
+    n = validate_file(path)
+    assert n >= 2
+    first = json.loads(path.read_text().splitlines()[0])
+    assert first["counters"]["serve.requests"] == 5.0
+
+
+def test_hub_env_knobs(tmp_path, monkeypatch):
+    path = tmp_path / "env_metrics.jsonl"
+    monkeypatch.setenv("GRAPHMP_METRICS", str(path))
+    monkeypatch.setenv("GRAPHMP_METRICS_INTERVAL", "0.05")
+    hub = MetricsHub()  # picks both up from the environment
+    assert hub.emit_path == path and hub.emit_interval == 0.05
+    hub.gauge("x").set(1)
+    hub.close()
+    assert validate_file(path) >= 1
+    monkeypatch.setenv("GRAPHMP_METRICS", "")
+    assert MetricsHub().emit_path is None  # empty disables
+
+
+def test_validate_snapshot_rejects_malformed():
+    good = MetricsHub().sample()
+    validate_snapshot(good)
+    for mutate in (
+        lambda s: s.update(v=2),
+        lambda s: s.update(t=-1.0),
+        lambda s: s.update(t=float("nan")),
+        lambda s: s.pop("gauges"),
+        lambda s: s["counters"].update(bad=-1.0),
+        lambda s: s["gauges"].update(bad=float("inf")),
+        lambda s: s["histograms"].update(bad={"count": 1}),  # missing fields
+        lambda s: s["histograms"].update(bad={
+            **{f: 0.0 for f in ("sum", "min", "max", "mean",
+                                "p50", "p90", "p95", "p99")},
+            "count": 1.5}),  # non-int count
+    ):
+        snap = json.loads(json.dumps(good))
+        mutate(snap)
+        with pytest.raises(ValueError):
+            validate_snapshot(snap)
+    with pytest.raises(ValueError):
+        validate_snapshot([])
+
+
+def test_validate_file_and_cli(tmp_path, capsys):
+    good = tmp_path / "good.jsonl"
+    hub = MetricsHub(good, emit_interval=10.0)
+    hub.counter("c").inc()
+    hub.close()
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("\n")
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"v": 99}\n')
+    with pytest.raises(ValueError, match="no snapshots"):
+        validate_file(empty)
+    with pytest.raises(ValueError, match="bad.jsonl:1"):
+        validate_file(bad)
+    assert main([str(good)]) == 0
+    assert "ok" in capsys.readouterr().out
+    assert main([str(good), str(bad)]) == 1
+    assert "FAIL" in capsys.readouterr().out
