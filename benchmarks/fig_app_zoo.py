@@ -1,0 +1,66 @@
+"""App-zoo sweep: every registered application end-to-end on the bench
+graph — wall time, edges/s, and Table-3 disk-byte accounting per app.
+
+The app list comes from ``repro.core.apps.list_apps()`` (the same registry
+GraphService serves from), so registering a new application automatically
+adds a row here; only its invocation arguments need an entry below.
+"""
+from __future__ import annotations
+
+from benchmarks.common import get_store, row
+from repro.core.apps import list_apps
+from repro.session import GraphSession
+
+ITERS = 10
+# per-app invocation arguments (mirrors tests/_zoo_runner.py at bench scale)
+SOLO_ARGS = {
+    "pagerank": {"max_iters": ITERS},
+    "sssp": {"source": 5},
+    "bfs": {"source": 7},
+    "cc": {},
+    "label_propagation": {},
+    "kcore": {"k": 4},
+    # full-graph triangle count is quadratic in n at bench scale; a 256-vertex
+    # slab still streams every shard per chunk, which is what we measure
+    "triangles": {"chunk": 64, "lo": 0, "hi": 256},
+}
+BATCH_ARGS = {
+    "sssp_multi": {"sources": (1, 5, 9, 13)},
+    "bfs_multi": {"sources": (2, 6, 10, 14)},
+    "personalized_pagerank": {"seeds": (3, 11), "max_iters": ITERS},
+    "lp_multi": {"sources": (0, 5, 9)},
+    "kcore_multi": {"ks": (2, 4)},
+    "triangles_multi": {"vertices": (1, 2, 3, 4)},
+    "random_walks": {"sources": (1, 5, 9, 13), "length": 16, "seed": 3},
+}
+
+
+def run() -> list[str]:
+    out = []
+    store = get_store()
+    for info in list_apps():
+        if info.kind == "alias":
+            continue
+        # cold cache per app: the paper's per-application measurement
+        with GraphSession(store, cache_mode="auto",
+                          cache_budget_bytes=1 << 30) as sess:
+            if info.name in BATCH_ARGS:  # batched programs AND drivers
+                kw = dict(BATCH_ARGS[info.name])
+                kw.setdefault("max_iters", 400)
+                if info.name == "triangles_multi":
+                    kw["max_iters"] = 4
+                sess.run_batch(info.name, **kw)
+                res = sess.last_batch_result
+                width = res.num_columns
+            else:
+                kw = dict(SOLO_ARGS[info.name])
+                res = sess.run(info.name, max_iters=kw.pop("max_iters", 400),
+                               **kw)
+                width = 1
+        disk = sum(h.disk_bytes for h in res.history)
+        out.append(row(
+            f"fig_app_zoo_{info.name}", res.total_seconds * 1e6,
+            f"kind={info.kind};k={width};iters={res.iterations};"
+            f"edges_per_s={res.edges_per_second() / 1e6:.1f}M;"
+            f"disk_mb={disk / 1e6:.1f}"))
+    return out

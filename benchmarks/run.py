@@ -8,16 +8,17 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig7_selective, fig8_cache_modes, fig10_inmemory,
-                            fig_autotune, fig_batch_frontiers, fig_cache_tiers,
-                            fig_delta_incremental, fig_multidevice,
-                            fig_pipeline_overlap, fig_serve_throughput,
-                            grad_compression, kernel_spmv, roofline_report,
-                            table2_compression, table3_io_model, table5_apps,
-                            table8_preprocessing)
+                            fig_app_zoo, fig_autotune, fig_batch_frontiers,
+                            fig_cache_tiers, fig_delta_incremental,
+                            fig_multidevice, fig_pipeline_overlap,
+                            fig_serve_throughput, grad_compression,
+                            kernel_spmv, roofline_report, table2_compression,
+                            table3_io_model, table5_apps, table8_preprocessing)
     modules = [
         ("table2_compression", table2_compression),
         ("table3_io_model", table3_io_model),
         ("table5_apps (tables 5-7)", table5_apps),
+        ("fig_app_zoo", fig_app_zoo),
         ("table8_preprocessing", table8_preprocessing),
         ("fig7_selective", fig7_selective),
         ("fig8_cache_modes", fig8_cache_modes),

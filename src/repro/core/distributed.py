@@ -205,8 +205,10 @@ class ShardedVSWEngine(VSWEngine):
 
         if self.batched:
             has_aux = getattr(program, "make_aux", None) is not None
+            wants_it = getattr(program, "wants_iteration", False)
 
-            def wave(dst, x, src, aux, cols, vals, row_map, start, num_rows):
+            def wave(dst, x, src, aux, it, cols, vals, row_map, start,
+                     num_rows):
                 dst, cols, vals, row_map = dst[0], cols[0], vals[0], row_map[0]
                 start, num_rows = start[0], num_rows[0]
                 R, K = cols.shape[0], src.shape[1]
@@ -216,14 +218,19 @@ class ShardedVSWEngine(VSWEngine):
                 rows = start + jnp.arange(R)
                 aux_slice = (jax.lax.dynamic_slice(aux, (start, 0), (R, K))
                              if has_aux else None)
-                new_slice = program.post(seg, old_slice, rows, n,
-                                         aux_slice).astype(dst.dtype)
+                if wants_it:
+                    new_slice = program.post(seg, old_slice, rows, n,
+                                             aux_slice, it)
+                else:
+                    new_slice = program.post(seg, old_slice, rows, n,
+                                             aux_slice)
+                new_slice = new_slice.astype(dst.dtype)
                 keep = (jnp.arange(R) < num_rows)[:, None]
                 new_slice = jnp.where(keep, new_slice, old_slice)
                 return jax.lax.dynamic_update_slice(dst, new_slice,
                                                     (start, 0))[None]
 
-            wave_in = (shd, rep, rep, rep, shd, shd, shd, shd, shd)
+            wave_in = (shd, rep, rep, rep, rep, shd, shd, shd, shd, shd)
 
             def merge(dst, src):
                 dstl = dst[0]
@@ -326,7 +333,7 @@ class ShardedVSWEngine(VSWEngine):
         return tuple(jax.device_put(a, sharding)
                      for a in (cols, vals, rmap, start, nrows))
 
-    def _sweep(self, x, src, aux_dev, schedule, epoch_check):
+    def _sweep(self, x, src, aux_dev, it_dev, schedule, epoch_check):
         D = self._num_devices
         scheds = [[p for p in schedule if self._owner[p] == d]
                   for d in range(D)]
@@ -340,7 +347,7 @@ class ShardedVSWEngine(VSWEngine):
                            for d in range(D)]
                 tail = self._assemble_wave(entries)
                 if self.batched:
-                    dst = self._wave_step(dst, x, src, aux_dev, *tail)
+                    dst = self._wave_step(dst, x, src, aux_dev, it_dev, *tail)
                 else:
                     dst = self._wave_step(dst, x, src, *tail)
         finally:
@@ -595,11 +602,13 @@ def spmv_2d(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
                                        use_pallas=use_pallas).reshape(-1)
         from repro.kernels.spmv.ref import segment_combine
         seg = segment_combine(partial_rows, row_map_b, cols_b.shape[0], semiring)
-        if semiring.startswith("plus"):
+        from repro.core.semiring import SEMIRINGS
+        sem = SEMIRINGS[semiring]
+        if sem.is_plus:
             seg = jax.lax.psum(seg, src_axis)
         else:
             allseg = jax.lax.all_gather(seg, src_axis)  # [S, R]
-            seg = jnp.min(allseg, axis=0)
+            seg = (jnp.max if sem.is_max else jnp.min)(allseg, axis=0)
         return seg[None]
 
     fn = jax.shard_map(

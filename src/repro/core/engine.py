@@ -459,8 +459,13 @@ class VSWEngine:
             # runtime ``aux`` argument so the compiled step — and therefore
             # the engine — is shared across source/seed sets (jit_signature).
             has_aux = getattr(program, "make_aux", None) is not None
+            # phase-dependent programs (triangle counting's two-pass probe)
+            # additionally receive the iteration number as a DEVICE scalar —
+            # a runtime argument, so every iteration reuses one compiled step
+            wants_it = getattr(program, "wants_iteration", False)
 
-            def shard_step(dst, x, src, aux, cols, vals, row_map, start, num_rows):
+            def shard_step(dst, x, src, aux, it, cols, vals, row_map, start,
+                           num_rows):
                 R = cols.shape[0]
                 K = src.shape[1]
                 seg = ell_spmv_batch(x, cols, vals, row_map, R, semiring,
@@ -469,8 +474,13 @@ class VSWEngine:
                 rows = start + jnp.arange(R)
                 aux_slice = (jax.lax.dynamic_slice(aux, (start, 0), (R, K))
                              if has_aux else None)
-                new_slice = program.post(seg, old_slice, rows, n,
-                                         aux_slice).astype(dst.dtype)
+                if wants_it:
+                    new_slice = program.post(seg, old_slice, rows, n,
+                                             aux_slice, it)
+                else:
+                    new_slice = program.post(seg, old_slice, rows, n,
+                                             aux_slice)
+                new_slice = new_slice.astype(dst.dtype)
                 keep = (jnp.arange(R) < num_rows)[:, None]
                 new_slice = jnp.where(keep, new_slice, old_slice)
                 return jax.lax.dynamic_update_slice(dst, new_slice, (start, 0))
@@ -634,7 +644,7 @@ class VSWEngine:
             decode_seconds_saved=cs.decode_seconds_saved - saved0,
         )
 
-    def _sweep(self, x, src, aux_dev, schedule, epoch_check):
+    def _sweep(self, x, src, aux_dev, it_dev, schedule, epoch_check):
         """One edge sweep: stream the scheduled shards, fold each into the
         destination array.  Returns ``(new values [n_pad(, K)],
         changed mask [n(, K)] as a numpy bool array)``."""
@@ -645,7 +655,7 @@ class VSWEngine:
             tail = (cols_dev, vals_dev, row_map_dev, shard.start_vertex,
                     shard.end_vertex - shard.start_vertex)
             if self.batched:
-                dst = self._shard_step(dst, x, src, aux_dev, *tail)
+                dst = self._shard_step(dst, x, src, aux_dev, it_dev, *tail)
             else:
                 dst = self._shard_step(dst, x, src, *tail)
         return dst, np.asarray(self._changed_fn(dst, src))
@@ -771,7 +781,11 @@ class VSWEngine:
                 # bill this sweep only to columns still holding a frontier
                 col_iters += col_live
             x = self._gather_fn(src, self._out_deg_dev)
-            dst, changed = self._sweep(x, src, aux_dev, schedule, epoch_check)
+            # iteration number as a device scalar: same shape/dtype every
+            # sweep, so phase-dependent batched posts never retrace
+            it_dev = jnp.int32(it) if self.batched else None
+            dst, changed = self._sweep(x, src, aux_dev, it_dev, schedule,
+                                       epoch_check)
             last_changed = changed
             if self.batched:
                 col_live = changed.any(axis=0)

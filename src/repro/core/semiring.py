@@ -9,6 +9,7 @@ PageRank : REDUCE=+,   COMBINE=(w, s) -> s            POST = 0.15/n + 0.85*p
 SSSP     : REDUCE=min, COMBINE=(w, s) -> s + w        POST = min(p, old)
 CC       : REDUCE=min, COMBINE=(w, s) -> s            POST = min(p, old)
 BFS      : REDUCE=min, COMBINE=(w, s) -> s + 1        POST = min(p, old)
+LP       : REDUCE=max, COMBINE=(w, s) -> s            POST = max(p, old)
 
 The semiring is the device-side contract shared by the pure-jnp reference
 (`kernels/spmv/ref.py`), the Pallas kernels (`kernels/spmv/spmv.py`) and the
@@ -36,6 +37,9 @@ class Semiring:
     identity: float
     # whether `reduce` is `+` (enables the one-hot MXU SpMV variant)
     is_plus: bool = False
+    # whether `reduce` is `max` (the non-plus default is `min`, the
+    # propagation direction of sssp/bfs/cc; label propagation flips it)
+    is_max: bool = False
 
     def fold(self, edge_vals: Array, src_vals: Array, mask: Array, axis: int = -1) -> Array:
         """Reduce COMBINE(edge, src) over `axis`, treating ~mask as identity."""
@@ -43,6 +47,8 @@ class Semiring:
         contrib = jnp.where(mask, contrib, jnp.asarray(self.identity, contrib.dtype))
         if self.is_plus:
             return jnp.sum(contrib, axis=axis)
+        if self.is_max:
+            return jnp.max(contrib, axis=axis)
         return jnp.min(contrib, axis=axis)
 
     def fold_batch(self, edge_vals: Array, src_vals: Array, mask: Array) -> Array:
@@ -88,4 +94,14 @@ MIN_SRC = Semiring(
     identity=float("inf"),
 )
 
-SEMIRINGS = {s.name: s for s in (PLUS_TIMES, PLUS_SRC, MIN_PLUS, MIN_SRC)}
+# Label propagation pulls the neighbor's label and keeps the largest; -inf is
+# the identity so sentinel ELL slots (and vertices with no in-edges) never win.
+MAX_SRC = Semiring(
+    name="max_src",
+    reduce=jnp.maximum,
+    combine=lambda w, s: s,
+    identity=float("-inf"),
+    is_max=True,
+)
+
+SEMIRINGS = {s.name: s for s in (PLUS_TIMES, PLUS_SRC, MIN_PLUS, MIN_SRC, MAX_SRC)}

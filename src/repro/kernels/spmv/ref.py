@@ -56,6 +56,8 @@ def segment_combine(partials: jnp.ndarray, row_map: jnp.ndarray,
     p = partials.reshape(-1)
     if sem.is_plus:
         return jax.ops.segment_sum(p, row_map, num_segments=num_segments)
+    if sem.is_max:
+        return jax.ops.segment_max(p, row_map, num_segments=num_segments)
     return jax.ops.segment_min(p, row_map, num_segments=num_segments)
 
 
@@ -66,6 +68,8 @@ def segment_combine_batch(partials: jnp.ndarray, row_map: jnp.ndarray,
     sem = _as_semiring(semiring)
     if sem.is_plus:
         return jax.ops.segment_sum(partials, row_map, num_segments=num_segments)
+    if sem.is_max:
+        return jax.ops.segment_max(partials, row_map, num_segments=num_segments)
     return jax.ops.segment_min(partials, row_map, num_segments=num_segments)
 
 

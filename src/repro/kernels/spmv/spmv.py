@@ -41,6 +41,8 @@ def _fold_tile(sem: Semiring, vals, xg, cols):
     contrib = jnp.where(mask, contrib, jnp.asarray(sem.identity, contrib.dtype))
     if sem.is_plus:
         return jnp.sum(contrib, axis=-1, keepdims=True)
+    if sem.is_max:
+        return jnp.max(contrib, axis=-1, keepdims=True)
     return jnp.min(contrib, axis=-1, keepdims=True)
 
 

@@ -51,7 +51,7 @@ from collections import Counter, OrderedDict, deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from math import ceil
 
-from repro.core.apps import available_apps, batch_spec, is_incremental
+from repro.core.apps import batch_spec, is_incremental, list_apps
 from repro.graph.source import graph_token
 from repro.obs.metrics import Reservoir
 
@@ -434,7 +434,10 @@ class GraphService:
     def _served_apps(self) -> tuple:
         if self.config.apps is not None:
             return self.config.apps
-        return tuple(sorted(set(available_apps()) | {"ppr"}))
+        # registry-derived (no hard-coded names): every registered factory
+        # plus the batch-only serving aliases ("ppr", "lp", ...) list_apps
+        # reports from the BatchSpec table
+        return tuple(info.name for info in list_apps())
 
     # ------------------------------------------------------------------
     def submit(self, app: str, **params) -> Future:

@@ -76,8 +76,8 @@ import numpy as np
 
 from pathlib import Path
 
-from repro.core.apps import (BatchedVertexProgram, VertexProgram, get_app,
-                             is_incremental)
+from repro.core.apps import (BatchedVertexProgram, DriverProgram,
+                             VertexProgram, get_app, is_incremental)
 from repro.core.cache import CompressedShardCache, PartitionedShardCache
 from repro.core.engine import (BatchRunResult, EngineConfig, IterationStats,
                                RunResult, VSWEngine, _store_epoch)
@@ -133,9 +133,19 @@ _BATCH_ALIASES = {
     "bfs": "bfs_multi",
     "pagerank": "personalized_pagerank",
     "ppr": "personalized_pagerank",
+    "lp": "lp_multi",
+    "kcore": "kcore_multi",
+    "triangle_count": "triangles_multi",
+    "random_walk": "random_walks",
 }
-# factories whose source parameter is called "seeds" (PPR vocabulary)
-_SEED_PARAM_APPS = {"personalized_pagerank"}
+# factories whose per-column parameter is not called "sources" (PPR seeds,
+# k-core thresholds, triangle-count probe vertices); sources= still works
+# for all of them and is rewritten onto the factory's own vocabulary
+_BATCH_PARAMS = {
+    "personalized_pagerank": "seeds",
+    "kcore_multi": "ks",
+    "triangles_multi": "vertices",
+}
 
 
 class GraphSession:
@@ -243,7 +253,8 @@ class GraphSession:
 
     # -- engine construction / reuse ------------------------------------
     def _resolve(self, app, app_kwargs) -> tuple[VertexProgram, object]:
-        if isinstance(app, (VertexProgram, BatchedVertexProgram)):
+        if isinstance(app, (VertexProgram, BatchedVertexProgram,
+                            DriverProgram)):
             if app_kwargs:
                 raise TypeError(
                     "application kwargs only apply when dispatching by name; "
@@ -251,6 +262,9 @@ class GraphSession:
             program = app
         else:
             program = get_app(app, **app_kwargs)
+        if isinstance(program, DriverProgram):
+            # host-driven: no engine, no jit cache — the key is unused
+            return program, ("driver", program.name)
         # programs declaring a jit_signature share engines across every
         # parameterization with identical device callables (e.g. ALL sssp
         # sources, ALL K-landmark sets of the same K): the signature is the
@@ -272,6 +286,10 @@ class GraphSession:
         works; concurrent callers should go through ``session.run`` /
         ``run_batch`` (which pin the program per call) instead."""
         program, prog_key = self._resolve(app, app_kwargs)
+        if isinstance(program, DriverProgram):
+            raise TypeError(
+                f"{program.name!r} is a host-driven application and has no "
+                "engine; dispatch it through session.run / run_batch")
         return self._engine_for(program, prog_key, config)
 
     def _run_target(self, app, app_kwargs, config):
@@ -281,8 +299,11 @@ class GraphSession:
         (thread-safe sharing across parameterizations).  Name-keyed engines
         (no jit_signature) run their OWN program: the cache key already
         proves name+kwargs equality, and a fresh factory instance would
-        fail _check_program's identity test."""
+        fail _check_program's identity test.  Host-driven programs have no
+        engine at all — (None, driver)."""
         program, prog_key = self._resolve(app, app_kwargs)
+        if isinstance(program, DriverProgram):
+            return None, program
         eng = self._engine_for(program, prog_key, config)
         return eng, (program if prog_key[0] == "sig" else None)
 
@@ -351,9 +372,26 @@ class GraphSession:
         # the program rides along explicitly: engines shared by jit_signature
         # stay stateless across concurrent runs (thread-safety contract)
         eng, run_program = self._run_target(app, app_kwargs, config)
+        if eng is None:  # host-driven application
+            return self._run_driver(
+                run_program, max_iters=max_iters,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, resume=resume,
+                config=config)
         return eng.run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
                        checkpoint_every=checkpoint_every, resume=resume,
                        program=run_program)
+
+    def _run_driver(self, program: DriverProgram, *, max_iters,
+                    checkpoint_dir, checkpoint_every, resume, config):
+        if checkpoint_dir or checkpoint_every or resume:
+            raise TypeError(
+                f"{program.name!r} is a host-driven application; engine "
+                "checkpoint/resume do not apply to it")
+        result = program.run(self, max_iters=max_iters, config=config)
+        if isinstance(result, BatchRunResult):
+            self.last_batch_result = result
+        return result
 
     def iter_run(self, app: str | VertexProgram, *, max_iters: int = 200,
                  checkpoint_dir: str | None = None, checkpoint_every: int = 0,
@@ -375,6 +413,10 @@ class GraphSession:
                     break
         """
         eng, run_program = self._run_target(app, app_kwargs, config)
+        if eng is None:
+            raise TypeError(
+                f"{run_program.name!r} is a host-driven application; "
+                "iter_run streams engine iterations — use run() for it")
         return eng.iter_run(max_iters=max_iters, checkpoint_dir=checkpoint_dir,
                             checkpoint_every=checkpoint_every, resume=resume,
                             program=run_program)
@@ -413,7 +455,7 @@ class GraphSession:
         values, shared history) stays available as
         ``session.last_batch_result`` until the next ``run_batch`` call.
         """
-        if isinstance(app, BatchedVertexProgram):
+        if isinstance(app, (BatchedVertexProgram, DriverProgram)):
             if sources is not None:
                 raise TypeError(
                     "sources= only applies when dispatching by name; the "
@@ -422,7 +464,7 @@ class GraphSession:
             program, prog_key = self._resolve(app, app_kwargs)
         else:
             name = _BATCH_ALIASES.get(app, app)
-            param = "seeds" if name in _SEED_PARAM_APPS else "sources"
+            param = _BATCH_PARAMS.get(name, "sources")
             if sources is not None:
                 if param in app_kwargs:
                     raise TypeError(
@@ -445,6 +487,15 @@ class GraphSession:
                     raise TypeError(
                         f"{name!r} is not a batched application") from None
                 raise  # genuine bad kwarg — keep the factory's own message
+        if isinstance(program, DriverProgram):
+            if not program.batched:
+                raise TypeError(f"{app!r} is not a batched application")
+            result = self._run_driver(
+                program, max_iters=max_iters, checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, resume=resume,
+                config=config)
+            assert isinstance(result, BatchRunResult)
+            return result.columns()
         if not isinstance(program, BatchedVertexProgram):
             raise TypeError(f"{app!r} is not a batched application")
         eng = self._engine_for(program, prog_key, config)
@@ -543,7 +594,7 @@ class GraphSession:
         previous values directly (0 iterations).
         """
         program, prog_key = self._resolve(app, app_kwargs)
-        if isinstance(program, BatchedVertexProgram):
+        if isinstance(program, (BatchedVertexProgram, DriverProgram)):
             raise TypeError(
                 "run_incremental takes single-frontier applications; "
                 "run_batch results cannot seed it")

@@ -1,23 +1,47 @@
 """Optional-hypothesis shim: property tests SKIP (not error) when the
 container lacks hypothesis.  Import ``given``/``settings``/``st`` from here
-instead of from hypothesis directly."""
-try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    import pytest
+instead of from hypothesis directly.
 
+Every ``@given`` test — present or absent hypothesis — also carries the
+``hypothesis`` pytest marker (registered in pyproject.toml), so CI can
+shard property tests from the deterministic suite with ``-m hypothesis`` /
+``-m "not hypothesis"``.  ``prop_settings`` is the shared settings profile:
+no deadline (the first example pays the jit compiles) and a CI-sized
+example budget.
+"""
+import pytest
+
+try:
+    from hypothesis import given as _hypothesis_given  # noqa: F401
+    from hypothesis import settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.hypothesis(
+                _hypothesis_given(*args, **kwargs)(fn))
+        return deco
+
+    def prop_settings(max_examples: int = 25, **kw):
+        return settings(deadline=None, max_examples=max_examples, **kw)
+
+except ImportError:
     HAVE_HYPOTHESIS = False
 
     def given(*args, **kwargs):
         def deco(fn):
-            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+            return pytest.mark.hypothesis(
+                pytest.mark.skip(reason="hypothesis not installed")(fn))
         return deco
 
     def settings(*args, **kwargs):
         def deco(fn):
             return fn
         return deco
+
+    def prop_settings(max_examples: int = 25, **kw):
+        return settings()
 
     class _Strategies:
         """Inert placeholder: any attribute access or call chains to

@@ -1,0 +1,62 @@
+"""Shared app-zoo runner: one invocation table for every registered app.
+
+Used by tests/test_app_zoo.py in-process AND by its GRAPHMP_DEVICES=2
+subprocess leg (which imports this module instead of duplicating the
+tables), so the differential matrix compares exactly the same calls.
+"""
+import hashlib
+
+import numpy as np
+
+from repro.core.apps import list_apps
+from repro.session import GraphSession
+
+PR_ITERS = 20
+# per-app invocation arguments; test_zoo_covers_every_app pins these tables
+# to the live registry, so registering an app without extending them fails
+SOLO_ARGS = {
+    "pagerank": {"max_iters": PR_ITERS},
+    "sssp": {"source": 5},
+    "bfs": {"source": 7},
+    "cc": {},
+    "label_propagation": {},
+    "kcore": {"k": 2},
+    "triangles": {"chunk": 64},
+}
+BATCH_ARGS = {
+    "sssp_multi": {"sources": (1, 5, 9)},
+    "bfs_multi": {"sources": (2, 6)},
+    "personalized_pagerank": {"seeds": (3, 11), "max_iters": PR_ITERS},
+    "lp_multi": {"sources": (0, 5, 9)},
+    "kcore_multi": {"ks": (2, 3)},
+    "triangles_multi": {"vertices": (1, 2, 3)},
+    "random_walks": {"sources": (1, 5, 9), "length": 12, "seed": 3},
+}
+
+
+def run_zoo(path, **session_kwargs):
+    """name -> (values, total disk bytes) for every registered app."""
+    out = {}
+    with GraphSession(path, **session_kwargs) as sess:
+        for info in list_apps():
+            if info.kind == "alias":
+                continue
+            if info.name in BATCH_ARGS:  # batched programs AND batched drivers
+                kw = dict(BATCH_ARGS[info.name])
+                sess.run_batch(info.name, max_iters=kw.pop("max_iters", 400),
+                               **kw)
+                res = sess.last_batch_result
+            else:
+                kw = dict(SOLO_ARGS[info.name])
+                res = sess.run(info.name, max_iters=kw.pop("max_iters", 400),
+                               **kw)
+            out[info.name] = (np.asarray(res.values),
+                              sum(h.disk_bytes for h in res.history))
+    return out
+
+
+def digest(results):
+    """JSON-able fingerprint: sha256 of the value bytes + disk total."""
+    return {name: [hashlib.sha256(np.ascontiguousarray(vals).tobytes())
+                   .hexdigest(), int(disk)]
+            for name, (vals, disk) in sorted(results.items())}

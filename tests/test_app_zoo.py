@@ -1,0 +1,382 @@
+"""App-zoo differential harness + oracles for the PR-9 applications.
+
+Two layers:
+
+* **Oracles** — label propagation, k-core, triangle counting and random-walk
+  sampling pinned against NetworkX / straight-line NumPy references (the
+  style of test_oracles.py), including the walk distributional invariants:
+  a fixed seed reproduces bitwise, and empirical visit frequencies match
+  the oracle transition-matrix expectation.
+
+* **Differential matrix** — EVERY registered application (enumerated via
+  ``list_apps``, so a new app is covered the day it registers) runs through
+  backend {npz, packed, memory} x cache mode {0, adaptive} x prefetch
+  {0, 2}, and a GRAPHMP_DEVICES=2 subprocess leg, asserting bitwise-equal
+  values and identical Table-3 disk-byte accounting.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from tests._hypo import given, prop_settings, st
+from tests._zoo_runner import BATCH_ARGS, SOLO_ARGS, digest, run_zoo
+
+from repro.core.apps import list_apps
+from repro.graph.preprocess import preprocess_graph
+from repro.graph.storage import write_edge_list
+from repro.session import GraphSession
+
+try:
+    import networkx as nx
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    nx = None
+
+needs_networkx = pytest.mark.skipif(nx is None,
+                                    reason="networkx not installed")
+
+
+# ---------------------------------------------------------------------------
+# graphs
+# ---------------------------------------------------------------------------
+def _symmetric_graph(seed, n, m):
+    """Connected symmetric simple graph: random edges + the undirected ring
+    (no dead ends, so walks never halt), deduplicated, no self-loops."""
+    rng = np.random.default_rng(seed)
+    src = np.concatenate([rng.integers(0, n, size=m), np.arange(n)])
+    dst = np.concatenate([rng.integers(0, n, size=m), (np.arange(n) + 1) % n])
+    src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    keep = src != dst
+    pairs = np.unique(np.stack([src[keep], dst[keep]], axis=1), axis=0)
+    return pairs[:, 0], pairs[:, 1]
+
+
+def _build_store(base, src, dst, n):
+    write_edge_list(base / "el", [(src, dst)], num_vertices=n)
+    return preprocess_graph(str(base / "el"), str(base / "store"),
+                            threshold_edge_num=512, ell_max_width=128)
+
+
+N = 192
+
+
+@pytest.fixture(scope="module")
+def zoo_graph(tmp_path_factory):
+    src, dst = _symmetric_graph(42, N, 3 * N)
+    base = tmp_path_factory.mktemp("zoo")
+    store = _build_store(base, src, dst, N)
+    assert store.num_shards > 1  # the sweep must cross shard boundaries
+    return src, dst, str(base / "store")
+
+
+# ---------------------------------------------------------------------------
+# NumPy oracles (independent of the engine stack)
+# ---------------------------------------------------------------------------
+def oracle_label_propagation(src, dst, n):
+    """Fixpoint of directed max-label propagation."""
+    label = np.arange(n, dtype=np.float64)
+    while True:
+        new = label.copy()
+        np.maximum.at(new, dst, label[src])
+        if (new == label).all():
+            return label
+        label = new
+
+
+def oracle_kcore(src, dst, n, k):
+    """Iterated peeling of vertices with < k live in-neighbors."""
+    alive = np.ones(n, dtype=bool)
+    while True:
+        deg = np.bincount(dst[alive[src]], minlength=n)
+        new = alive & (deg >= k)
+        if (new == alive).all():
+            return alive.astype(np.float64)
+        alive = new
+
+
+def oracle_triangles(src, dst, n):
+    """diag(A^3)/2 on the (symmetric, simple) adjacency matrix."""
+    A = np.zeros((n, n), dtype=np.int64)
+    A[src, dst] = 1
+    return np.diag(A @ A @ A) / 2.0
+
+
+def _check_zoo_vs_numpy(seed, tmp_base):
+    """Engine vs NumPy oracles on one random symmetric graph — shared by
+    the deterministic tests below and the hypothesis property sweep."""
+    n = 48
+    src, dst = _symmetric_graph(seed, n, 2 * n)
+    store = _build_store(tmp_base, src, dst, n)
+    with GraphSession(store) as sess:
+        lp = sess.run("label_propagation", max_iters=4 * n)
+        assert lp.converged
+        np.testing.assert_array_equal(
+            lp.values, oracle_label_propagation(src, dst, n))
+        for k in (1, 2, 3):
+            kc = sess.run("kcore", k=k, max_iters=4 * n)
+            assert kc.converged
+            np.testing.assert_array_equal(
+                kc.values, oracle_kcore(src, dst, n, k))
+        tri = sess.run("triangles")
+        np.testing.assert_array_equal(
+            tri.values, oracle_triangles(src, dst, n))
+
+
+def test_zoo_vs_numpy_oracles(tmp_path):
+    _check_zoo_vs_numpy(123, tmp_path)
+
+
+@given(seed=st.integers(0, 2**20))
+@prop_settings(max_examples=5)
+def test_zoo_vs_numpy_oracles_property(seed, tmp_path_factory):
+    _check_zoo_vs_numpy(seed, tmp_path_factory.mktemp(f"prop_{seed}"))
+
+
+# ---------------------------------------------------------------------------
+# NetworkX oracles (shares nothing with this repo)
+# ---------------------------------------------------------------------------
+@needs_networkx
+def test_label_propagation_vs_networkx(zoo_graph):
+    src, dst, path = zoo_graph
+    g = nx.Graph(list(zip(src.tolist(), dst.tolist())))
+    g.add_nodes_from(range(N))
+    with GraphSession(path) as sess:
+        res = sess.run("label_propagation", max_iters=4 * N)
+        assert res.converged
+        want = np.empty(N)
+        for comp in nx.connected_components(g):
+            want[list(comp)] = max(comp)
+        np.testing.assert_array_equal(res.values, want)
+        # seeded broadcast: each lp_multi column marks its seed's component
+        cols = sess.run_batch("lp", sources=[0, 5, 9], max_iters=4 * N)
+        for col, s in zip(cols, (0, 5, 9)):
+            reach = nx.node_connected_component(g, s)
+            w = np.full(N, -1.0)
+            w[list(reach)] = float(s)
+            np.testing.assert_array_equal(col.values, w)
+
+
+@needs_networkx
+def test_kcore_vs_networkx(zoo_graph):
+    src, dst, path = zoo_graph
+    g = nx.Graph(list(zip(src.tolist(), dst.tolist())))
+    g.add_nodes_from(range(N))
+    with GraphSession(path) as sess:
+        for k in (2, 3, 4):
+            res = sess.run("kcore", k=k, max_iters=4 * N)
+            assert res.converged
+            want = np.zeros(N)
+            want[list(nx.k_core(g, k=k).nodes)] = 1.0
+            np.testing.assert_array_equal(res.values, want)
+        # one batched sweep answers all thresholds, bitwise equal to solo
+        cols = sess.run_batch("kcore", sources=[2, 3, 4], max_iters=4 * N)
+        for col, k in zip(cols, (2, 3, 4)):
+            solo = sess.run("kcore", k=k, max_iters=4 * N)
+            np.testing.assert_array_equal(col.values, solo.values)
+
+
+@needs_networkx
+def test_triangles_vs_networkx(zoo_graph):
+    src, dst, path = zoo_graph
+    g = nx.Graph(list(zip(src.tolist(), dst.tolist())))
+    g.add_nodes_from(range(N))
+    with GraphSession(path) as sess:
+        res = sess.run("triangles")
+        tri = nx.triangles(g)
+        np.testing.assert_array_equal(
+            res.values, [float(tri[v]) for v in range(N)])
+        # the probe columns sum to the same counts: t(u) = sum(col_u) / 2
+        cols = sess.run_batch("triangle_count", sources=[3, 17, 40])
+        for col, u in zip(cols, (3, 17, 40)):
+            assert np.asarray(col.values).sum() / 2 == res.values[u]
+
+
+# ---------------------------------------------------------------------------
+# random walks: determinism + distributional invariants
+# ---------------------------------------------------------------------------
+def test_random_walks_deterministic_and_batch_invariant(zoo_graph):
+    _, _, path = zoo_graph
+    with GraphSession(path) as sess:
+        a = sess.run_batch("random_walk", sources=[1, 5, 9], length=12,
+                           seed=7)
+        b = sess.run_batch("random_walk", sources=[1, 5, 9], length=12,
+                           seed=7)
+        for x, y in zip(a, b):  # fixed seed => bitwise reproducible
+            np.testing.assert_array_equal(x.values, y.values)
+        # column k is a pure function of (seed, source): solo == batched
+        solo = sess.run_batch("random_walk", sources=[5], length=12, seed=7)
+        np.testing.assert_array_equal(a[1].values, solo[0].values)
+        # a different seed decorrelates
+        c = sess.run_batch("random_walk", sources=[1, 5, 9], length=12,
+                           seed=8)
+        assert any(not np.array_equal(x.values, y.values)
+                   for x, y in zip(a, c))
+        # no dead ends on this graph: every walk takes every step, and
+        # visit counts include the starting position
+        for col in a:
+            assert np.asarray(col.values).sum() == 13
+            assert col.iterations == 12
+
+
+def test_random_walks_match_transition_matrix(tmp_path):
+    """Mean visit counts over many seeds converge to the oracle expectation
+    sum_{t<=L} e_s P^t, where P is the uniform in-neighbor transition."""
+    n, L, S, source = 16, 6, 400, 3
+    src, dst = _symmetric_graph(11, n, n)
+    store = _build_store(tmp_path, src, dst, n)
+    P = np.zeros((n, n))
+    for v in range(n):
+        nbrs = src[dst == v]  # walks step along the pull layout's in-edges
+        P[v, nbrs] = 1.0 / len(nbrs)
+    expect = np.zeros(n)
+    state = np.zeros(n)
+    state[source] = 1.0
+    for _ in range(L + 1):
+        expect += state
+        state = state @ P
+    with GraphSession(store) as sess:
+        total = np.zeros(n)
+        for seed in range(S):
+            col = sess.run_batch("random_walk", sources=[source], length=L,
+                                 seed=seed)[0]
+            total += np.asarray(col.values)
+    tv = 0.5 * np.abs(total / total.sum() - expect / expect.sum()).sum()
+    assert tv < 0.08, f"total-variation distance {tv:.3f}"
+
+
+# ---------------------------------------------------------------------------
+# the differential matrix: every registered app, every configuration
+# (invocation tables + runner live in tests/_zoo_runner.py, shared with the
+#  GRAPHMP_DEVICES=2 subprocess leg)
+# ---------------------------------------------------------------------------
+def test_zoo_covers_every_app():
+    """The invocation tables span the live registry — a new @register_app
+    without a matrix entry fails here, keeping the zoo differential."""
+    for info in list_apps():
+        if info.kind == "alias":  # covered through their batched family
+            assert info.family is not None
+        elif info.kind == "batched":
+            assert info.name in BATCH_ARGS, f"add {info.name} to BATCH_ARGS"
+        else:  # vertex programs and drivers (batched drivers batch-dispatch)
+            assert info.name in SOLO_ARGS or info.name in BATCH_ARGS, \
+                f"add {info.name} to SOLO_ARGS or BATCH_ARGS"
+
+
+_REFERENCE = {}  # cache_mode -> zoo results at (npz, prefetch=0)
+
+
+def _reference(path, cache_mode):
+    if cache_mode not in _REFERENCE:
+        _REFERENCE[cache_mode] = run_zoo(path, backend="npz",
+                                         cache_mode=cache_mode,
+                                         prefetch_depth=0)
+    return _REFERENCE[cache_mode]
+
+
+MATRIX = [pytest.param(b, m, p, id=f"{b}-mode{m}-pf{p}")
+          for b in ("npz", "packed", "memory")
+          for m in (0, "adaptive")
+          for p in (0, 2)
+          if not (b == "npz" and m == 0 and p == 0)]  # the reference itself
+
+
+@pytest.mark.parametrize("backend,cache_mode,prefetch", MATRIX)
+def test_differential_matrix(zoo_graph, backend, cache_mode, prefetch):
+    """Every app: bitwise-equal values and identical disk-byte accounting
+    against the npz/prefetch-0 reference at the same cache mode."""
+    _, _, path = zoo_graph
+    ref = _reference(path, cache_mode)
+    got = run_zoo(path, backend=backend, cache_mode=cache_mode,
+                  prefetch_depth=prefetch)
+    assert got.keys() == ref.keys()
+    for name in ref:
+        np.testing.assert_array_equal(
+            got[name][0], ref[name][0],
+            err_msg=f"{name}: values diverged under {backend}/"
+                    f"{cache_mode}/pf{prefetch}")
+        assert got[name][1] == ref[name][1], (
+            f"{name}: disk bytes {got[name][1]} != reference {ref[name][1]}")
+
+
+def test_values_invariant_across_cache_modes(zoo_graph):
+    """Cache modes change I/O accounting, never values: the mode-0 and
+    adaptive references agree bitwise app by app."""
+    _, _, path = zoo_graph
+    a, b = _reference(path, 0), _reference(path, "adaptive")
+    for name in a:
+        np.testing.assert_array_equal(a[name][0], b[name][0], err_msg=name)
+
+
+def _runner_pythonpath():
+    """src + this test directory (the subprocess imports the shared
+    _zoo_runner module instead of duplicating the invocation tables)."""
+    import os
+    from pathlib import Path
+    repo = Path(__file__).resolve().parent.parent
+    return os.pathsep.join([str(repo / "src"), str(repo / "tests")])
+
+
+def test_differential_matrix_two_devices(zoo_graph):
+    """The GRAPHMP_DEVICES=2 leg: the whole zoo, bitwise + byte-identical
+    to the single-device run of the same configuration (packed backend,
+    adaptive cache, prefetch 2 — the serving default shape)."""
+    from tests.test_sharded_session import run_with_devices
+    _, _, path = zoo_graph
+    solo = run_zoo(path, backend="packed", cache_mode="adaptive",
+                   prefetch_depth=2)
+    code = f"""
+    import json
+    import _zoo_runner as zoo
+    results = zoo.run_zoo({path!r}, backend="packed",
+                          cache_mode="adaptive", prefetch_depth=2)
+    print(json.dumps(zoo.digest(results)))
+    """
+    out = run_with_devices(code, n_devices=2, extra_env={
+        "GRAPHMP_DEVICES": "2",
+        "PYTHONPATH": _runner_pythonpath()})
+    got = json.loads(out.strip().splitlines()[-1])
+    assert got == digest(solo)
+
+
+# ---------------------------------------------------------------------------
+# registry introspection (satellite: no hard-coded app lists downstream)
+# ---------------------------------------------------------------------------
+def test_list_apps_classifies_the_zoo():
+    kinds = {i.name: i.kind for i in list_apps()}
+    assert kinds["label_propagation"] == "vertex"
+    assert kinds["kcore"] == "vertex"
+    assert kinds["lp_multi"] == "batched"
+    assert kinds["kcore_multi"] == "batched"
+    assert kinds["triangles_multi"] == "batched"
+    assert kinds["triangles"] == "driver"
+    assert kinds["random_walks"] == "driver"
+    for alias in ("ppr", "lp", "triangle_count", "random_walk"):
+        assert kinds[alias] == "alias"
+    fams = {i.name: i.family for i in list_apps()}
+    assert fams["kcore"] == "plus_src/kcore_multi"
+    assert fams["lp"] == "max_src/lp_multi"
+    incr = {i.name: i.incremental for i in list_apps()}
+    assert incr["label_propagation"] and not incr["kcore"]
+
+
+def test_service_serves_the_whole_registry(zoo_graph):
+    _, _, path = zoo_graph
+    with GraphSession(path) as sess, sess.service() as svc:
+        served = set(svc._served_apps())
+        assert {i.name for i in list_apps()} <= served
+
+
+def test_driver_dispatch_guards(zoo_graph):
+    _, _, path = zoo_graph
+    with GraphSession(path) as sess:
+        with pytest.raises(TypeError, match="host-driven"):
+            sess.run("random_walks", sources=(1,), checkpoint_dir="/tmp/x",
+                     checkpoint_every=2)
+        with pytest.raises(TypeError, match="host-driven"):
+            next(sess.iter_run("triangles"))
+        with pytest.raises(TypeError, match="host-driven"):
+            sess.engine("triangles")
+        with pytest.raises(TypeError, match="not a batched application"):
+            sess.run_batch("triangles", sources=[1])
+        with pytest.raises(ValueError, match="thresholds"):
+            sess.run_batch("kcore", sources=[-1])

@@ -496,3 +496,121 @@ def test_warmup_precompiles_bucket_sizes(graph_store):
             # exist and serve; the padded bucket engines are session-cached
             assert time.perf_counter() - t0 < 60
             assert len(sess._engines) >= 2  # K=1,2,4 sssp_multi buckets
+
+
+# ---------------------------------------------------------------------------
+# app-zoo hammer: lp + k-core + walks + ppr concurrently (ISSUE 9)
+# ---------------------------------------------------------------------------
+ZOO_MAX_ITERS = {"lp": 400, "kcore": 400, "random_walk": 100, "ppr": 20}
+
+
+def _zoo_queries(n):
+    """64 distinct queries, 16 per app (distinct => no memo hits, so the
+    per-app accounting below is exact)."""
+    qs = []
+    for i in range(16):
+        qs.append(("lp", {"source": (i * 29) % n}))
+    for i in range(16):
+        qs.append(("kcore", {"k": i}))
+    for i in range(16):
+        qs.append(("random_walk",
+                   {"source": (i * 13 + 2) % n, "length": 8, "seed": 5}))
+    for i in range(16):
+        qs.append(("ppr", {"seed": (i * 17 + 1) % n}))
+    assert len(qs) == 64
+    return qs
+
+
+@pytest.fixture(scope="module")
+def zoo_solo(graph_store):
+    """Solo ground truth for the zoo hammer: alias apps run as their own
+    K=1 micro-batches (that IS their solo form)."""
+    cache = {}
+    sess = GraphSession(graph_store)
+
+    def get(app, **params):
+        key = (app, tuple(sorted(params.items())))
+        if key not in cache:
+            params = dict(params)
+            max_iters = ZOO_MAX_ITERS[app]
+            if app == "kcore":
+                res = sess.run("kcore", k=params.pop("k"),
+                               max_iters=max_iters)
+            elif app == "lp":
+                res = sess.run_batch("lp", sources=[params.pop("source")],
+                                     max_iters=max_iters)[0]
+            elif app == "random_walk":
+                res = sess.run_batch(
+                    "random_walk", sources=[params.pop("source")],
+                    max_iters=max_iters, **params)[0]
+            else:  # ppr
+                res = sess.run_batch("ppr", sources=[params.pop("seed")],
+                                     max_iters=max_iters)[0]
+            cache[key] = np.asarray(res.values)
+        return cache[key]
+
+    yield get
+    sess.close()
+
+
+def test_mixed_zoo_hammer_bitwise_and_fair(graph_store, zoo_solo):
+    """8 threads x 64 mixed zoo queries (lp + kcore + walks + ppr) through
+    one service: exact apps (lp/kcore/random_walk) match their solo runs
+    bit for bit however they were coalesced; ppr (float-accumulating,
+    exact=False) to tolerance; per-app latency accounting sees exactly the
+    16 requests each app submitted."""
+    n = graph_store.num_vertices
+    queries = _zoo_queries(n)
+    results: dict[int, np.ndarray] = {}
+    errors: list[BaseException] = []
+    lock = threading.Lock()
+
+    with GraphSession(graph_store) as sess:
+        svc = GraphService(sess, ServiceConfig(
+            max_batch=8, max_wait_ms=20.0, max_inflight=2, memoize=True))
+        with svc:
+            def client(tid):
+                try:
+                    futs = [(i, svc.submit(
+                                app, max_iters=ZOO_MAX_ITERS[app], **params))
+                            for i, (app, params) in enumerate(queries)
+                            if i % 8 == tid]
+                    for i, f in futs:
+                        with lock:
+                            results[i] = np.asarray(
+                                f.result(timeout=300).values)
+                except BaseException as exc:  # noqa: BLE001 — surfaced below
+                    with lock:
+                        errors.append(exc)
+
+            threads = [threading.Thread(target=client, args=(t,))
+                       for t in range(8)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errors, errors
+            snap = svc.stats.snapshot()
+            # fair-share accounting: every app's reservoir saw its 16
+            per_app = {app: svc.stats._app_hist(app).count
+                       for app in ZOO_MAX_ITERS}
+            assert per_app == {app: 16 for app in ZOO_MAX_ITERS}, per_app
+
+    assert len(results) == 64
+    for i, (app, params) in enumerate(queries):
+        want = zoo_solo(app, **params)
+        if app == "ppr":
+            np.testing.assert_allclose(
+                results[i], want, atol=1e-6,
+                err_msg=f"query {i} ({app} {params}) diverged from solo")
+        else:
+            np.testing.assert_array_equal(
+                results[i], want,
+                err_msg=f"query {i} ({app} {params}) diverged from solo")
+    assert snap["completed"] == 64
+    assert snap["failed"] == 0 and snap["rejected"] == 0
+    # distinct queries => no memo hits; coalescing must still have engaged
+    assert snap["memo_hits"] == 0
+    executions = sum(snap["batch_occupancy"].values())
+    assert executions < 64
+    assert sum(k * v for k, v in snap["batch_occupancy"].items()) == 64
