@@ -14,7 +14,68 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import get_store, row
-from repro.kernels.spmv.ops import ell_spmv
+from repro.core.shards import quantize_edge_vals
+from repro.kernels.spmv.ops import describe_dispatch, ell_spmv, ell_spmv_batch
+
+# roofline variant grid (ISSUE satellite: fp32/fp16/int8 × K ∈ {1, 16})
+VARIANT_DTYPES = ("float32", "float16", "int8")
+VARIANT_KS = (1, 16)
+_R, _W, _N = 2048, 256, 1 << 15  # synthetic ELL problem, ~0.5M edge slots
+
+
+def _variant_problem(seed: int = 7):
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(0, _N, (_R, _W)).astype(np.int32)
+    cols[rng.random((_R, _W)) < 0.2] = -1  # ~20% padding, like a real shard
+    vals = (rng.random((_R, _W), dtype=np.float32) * 2.0 - 0.5).astype(np.float32)
+    row_map = np.arange(_R, dtype=np.int32)
+    x = rng.random((_N, max(VARIANT_KS)), dtype=np.float32)
+    return cols, vals, row_map, x
+
+
+def spmv_variants(use_pallas="auto", reps: int = 3) -> list[dict]:
+    """Time one SpMV per (edge dtype × K) variant; return records for the
+    roofline report.
+
+    ``model_bytes`` is the minimum HBM traffic of the path actually taken
+    (``describe_dispatch``): edge arrays once (cols int32 + vals at their
+    *stored* dtype — the quantization win), sources once, partials out.  The
+    unfused paths additionally materialize the gathered [R, W, K] matrix
+    (one write + one read).  Achieved bandwidth = model_bytes / seconds, an
+    *upper bound* on usefully-moved bytes — honest for compiled backends,
+    pessimistic in interpret mode (which is why the report prints the path).
+    """
+    cols_np, vals_np, row_map_np, x_np = _variant_problem()
+    cols = jnp.asarray(cols_np)
+    row_map = jnp.asarray(row_map_np)
+    out = []
+    for dtype in VARIANT_DTYPES:
+        q, scale, zero = quantize_edge_vals(vals_np, dtype)
+        vals = jnp.asarray(q)
+        qp = jnp.asarray([scale, zero], jnp.float32)
+        for k in VARIANT_KS:
+            if k == 1:
+                x = jnp.asarray(x_np[:, 0])
+                f = lambda: ell_spmv(x, cols, vals, row_map, _R, "min_plus",
+                                     use_pallas=use_pallas, qparams=qp)
+            else:
+                x = jnp.asarray(x_np[:, :k])
+                f = lambda: ell_spmv_batch(x, cols, vals, row_map, _R,
+                                           "min_plus", use_pallas=use_pallas,
+                                           qparams=qp)
+            path = describe_dispatch(use_pallas, n=_N, k=k)
+            jax.block_until_ready(f())  # compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(f())
+            dt = (time.perf_counter() - t0) / reps
+            model_bytes = (cols_np.nbytes + q.nbytes        # edge pass
+                           + _N * k * 4 + _R * k * 4)       # sources + out
+            if "fused" not in path:
+                model_bytes += 2 * _R * _W * k * 4          # gathered matrix
+            out.append(dict(dtype=dtype, k=k, seconds=dt,
+                            model_bytes=model_bytes, path=path))
+    return out
 
 
 def run() -> list[str]:

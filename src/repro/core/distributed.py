@@ -56,7 +56,8 @@ from repro.core.bloom import BloomFilter
 from repro.core.cache import PartitionedShardCache
 from repro.core.engine import EngineConfig, VSWEngine
 from repro.core.pipeline import ShardPipeline
-from repro.core.shards import LANE, SUBLANE, ELLShard, build_csr_shards, csr_to_ell
+from repro.core.shards import (LANE, SUBLANE, ELLShard, build_csr_shards,
+                               csr_to_ell, dequantize_edge_vals)
 from repro.dist.context import make_data_mesh
 from repro.kernels.spmv.ops import ell_spmv, ell_spmv_batch
 
@@ -185,7 +186,8 @@ class ShardedVSWEngine(VSWEngine):
         thread); the device transfer happens at wave assembly, where the
         wave's common [D, R, W] layout is known."""
         return (self._materialize(shard.cols), self._materialize(shard.vals),
-                self._materialize(shard.row_map))
+                self._materialize(shard.row_map),
+                np.array([shard.val_scale, shard.val_zero], dtype=np.float32))
 
     # -- compiled steps ---------------------------------------------------
     def _build_steps(self) -> None:
@@ -207,13 +209,13 @@ class ShardedVSWEngine(VSWEngine):
             has_aux = getattr(program, "make_aux", None) is not None
             wants_it = getattr(program, "wants_iteration", False)
 
-            def wave(dst, x, src, aux, it, cols, vals, row_map, start,
+            def wave(dst, x, src, aux, it, cols, vals, row_map, qp, start,
                      num_rows):
                 dst, cols, vals, row_map = dst[0], cols[0], vals[0], row_map[0]
-                start, num_rows = start[0], num_rows[0]
+                qp, start, num_rows = qp[0], start[0], num_rows[0]
                 R, K = cols.shape[0], src.shape[1]
                 seg = ell_spmv_batch(x, cols, vals, row_map, R, semiring,
-                                     use_pallas=use_pallas)
+                                     use_pallas=use_pallas, qparams=qp)
                 old_slice = jax.lax.dynamic_slice(src, (start, 0), (R, K))
                 rows = start + jnp.arange(R)
                 aux_slice = (jax.lax.dynamic_slice(aux, (start, 0), (R, K))
@@ -230,7 +232,7 @@ class ShardedVSWEngine(VSWEngine):
                 return jax.lax.dynamic_update_slice(dst, new_slice,
                                                     (start, 0))[None]
 
-            wave_in = (shd, rep, rep, rep, rep, shd, shd, shd, shd, shd)
+            wave_in = (shd, rep, rep, rep, rep, shd, shd, shd, shd, shd, shd)
 
             def merge(dst, src):
                 dstl = dst[0]
@@ -251,12 +253,12 @@ class ShardedVSWEngine(VSWEngine):
                             (int(B[dd]), 0))
                 return new_full, cnt
         else:
-            def wave(dst, x, src, cols, vals, row_map, start, num_rows):
+            def wave(dst, x, src, cols, vals, row_map, qp, start, num_rows):
                 dst, cols, vals, row_map = dst[0], cols[0], vals[0], row_map[0]
-                start, num_rows = start[0], num_rows[0]
+                qp, start, num_rows = qp[0], start[0], num_rows[0]
                 R = cols.shape[0]
                 seg = ell_spmv(x, cols, vals, row_map, R, semiring,
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas, qparams=qp)
                 old_slice = jax.lax.dynamic_slice(src, (start,), (R,))
                 new_slice = program.post(seg, old_slice, n).astype(dst.dtype)
                 keep = jnp.arange(R) < num_rows
@@ -264,7 +266,7 @@ class ShardedVSWEngine(VSWEngine):
                 return jax.lax.dynamic_update_slice(dst, new_slice,
                                                     (start,))[None]
 
-            wave_in = (shd, rep, rep, shd, shd, shd, shd, shd)
+            wave_in = (shd, rep, rep, shd, shd, shd, shd, shd, shd)
 
             def merge(dst, src):
                 dstl = dst[0]
@@ -311,27 +313,38 @@ class ShardedVSWEngine(VSWEngine):
         shards = [e[1] for e in entries if e is not None]
         R = max((s.cols.shape[0] for s in shards), default=SUBLANE)
         W = max((s.cols.shape[1] for s in shards), default=LANE)
+        # one vals dtype per wave (the shard_map step compiles per dtype); a
+        # mixed wave — possible mid-migration of a store — dequantizes to
+        # float32 on the host and ships identity qparams instead
+        vdts = {e[2][1].dtype for e in entries if e is not None}
+        mixed = len(vdts) > 1
+        vdt = np.float32 if (mixed or not vdts) else vdts.pop()
         cols = np.full((D, R, W), -1, dtype=np.int32)
-        vals = np.zeros((D, R, W), dtype=np.float32)
+        vals = np.zeros((D, R, W), dtype=vdt)
         rmap = np.zeros((D, R), dtype=np.int32)
+        qp = np.tile(np.array([1.0, 0.0], dtype=np.float32), (D, 1))
         start = np.full(D, self.n, dtype=np.int32)
         nrows = np.zeros(D, dtype=np.int32)
         for d, e in enumerate(entries):
             if e is None:
                 continue
             _p, shard, staged = e
-            c, v, rm = staged
+            c, v, rm, q = staged
+            if mixed and v.dtype != np.float32:
+                v = dequantize_edge_vals(v, float(q[0]), float(q[1]))
+                q = np.array([1.0, 0.0], dtype=np.float32)
             r, w = c.shape
             nr = int(shard.end_vertex - shard.start_vertex)
             cols[d, :r, :w] = c
             vals[d, :r, :w] = v
             rmap[d, :r] = rm
             rmap[d, r:] = min(nr, R)
+            qp[d] = q
             start[d] = shard.start_vertex
             nrows[d] = nr
         sharding = NamedSharding(self._mesh, P(self._axis))
         return tuple(jax.device_put(a, sharding)
-                     for a in (cols, vals, rmap, start, nrows))
+                     for a in (cols, vals, rmap, qp, start, nrows))
 
     def _sweep(self, x, src, aux_dev, it_dev, schedule, epoch_check):
         D = self._num_devices

@@ -464,12 +464,12 @@ class VSWEngine:
             # a runtime argument, so every iteration reuses one compiled step
             wants_it = getattr(program, "wants_iteration", False)
 
-            def shard_step(dst, x, src, aux, it, cols, vals, row_map, start,
-                           num_rows):
+            def shard_step(dst, x, src, aux, it, cols, vals, row_map, qp,
+                           start, num_rows):
                 R = cols.shape[0]
                 K = src.shape[1]
                 seg = ell_spmv_batch(x, cols, vals, row_map, R, semiring,
-                                     use_pallas=use_pallas)
+                                     use_pallas=use_pallas, qparams=qp)
                 old_slice = jax.lax.dynamic_slice(src, (start, 0), (R, K))
                 rows = start + jnp.arange(R)
                 aux_slice = (jax.lax.dynamic_slice(aux, (start, 0), (R, K))
@@ -485,9 +485,11 @@ class VSWEngine:
                 new_slice = jnp.where(keep, new_slice, old_slice)
                 return jax.lax.dynamic_update_slice(dst, new_slice, (start, 0))
         else:
-            def shard_step(dst, x, src, cols, vals, row_map, start, num_rows):
+            def shard_step(dst, x, src, cols, vals, row_map, qp, start,
+                           num_rows):
                 R = cols.shape[0]
-                seg = ell_spmv(x, cols, vals, row_map, R, semiring, use_pallas=use_pallas)
+                seg = ell_spmv(x, cols, vals, row_map, R, semiring,
+                               use_pallas=use_pallas, qparams=qp)
                 old_slice = jax.lax.dynamic_slice(src, (start,), (R,))
                 new_slice = program.post(seg, old_slice, n).astype(dst.dtype)
                 keep = jnp.arange(R) < num_rows
@@ -609,7 +611,9 @@ class VSWEngine:
         so the transfer overlaps the previous shard's SpMV."""
         return (jnp.asarray(self._materialize(shard.cols)),
                 jnp.asarray(self._materialize(shard.vals)),
-                jnp.asarray(self._materialize(shard.row_map)))
+                jnp.asarray(self._materialize(shard.row_map)),
+                jnp.asarray(np.array([shard.val_scale, shard.val_zero],
+                                     dtype=np.float32)))
 
     def _schedule(self, active_ids: np.ndarray | None, active_ratio: float) -> tuple[list[int], bool]:
         """Algorithm 2 line 5: all shards, unless selective scheduling kicks in."""
@@ -651,8 +655,9 @@ class VSWEngine:
         dst = src + 0.0  # materialize a copy: the shard step donates its dst
         for _p, shard, dev in self._pipeline.stream(schedule,
                                                     check=epoch_check):
-            cols_dev, vals_dev, row_map_dev = dev
-            tail = (cols_dev, vals_dev, row_map_dev, shard.start_vertex,
+            cols_dev, vals_dev, row_map_dev, qp_dev = dev
+            tail = (cols_dev, vals_dev, row_map_dev, qp_dev,
+                    shard.start_vertex,
                     shard.end_vertex - shard.start_vertex)
             if self.batched:
                 dst = self._shard_step(dst, x, src, aux_dev, it_dev, *tail)

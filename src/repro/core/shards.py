@@ -25,6 +25,63 @@ import numpy as np
 LANE = 128  # TPU lane width; ELL width is padded to a multiple of this.
 SUBLANE = 8  # TPU sublane; ELL row count padded to a multiple of this.
 
+# Edge-value storage dtypes (GRAPHMP_EDGE_DTYPE / preprocess val_dtype).
+# float32 is the exact baseline; float16/int8 trade bounded error for halved/
+# quartered edge-value bytes on disk, in cache, AND over the HBM read the
+# SpMV kernel performs (dequantization happens inside the kernel).
+EDGE_VAL_DTYPES = ("float32", "float16", "int8")
+
+
+# --------------------------------------------------------------------------
+# edge-value quantization (per-shard affine scheme)
+# --------------------------------------------------------------------------
+def quantize_edge_vals(vals: np.ndarray, dtype: str) -> tuple[np.ndarray, float, float]:
+    """Quantize a float32 edge-value array -> (q, scale, zero).
+
+    Dequantization is the single affine formula used everywhere (kernel,
+    jnp fallback, delta re-layout)::
+
+        v_hat = (q.astype(float32) - zero) * scale
+
+    * float32 — identity (scale=1, zero=0).
+    * float16 — plain downcast (scale=1, zero=0); error <= 2^-11 * |v|.
+    * int8    — affine over [vmin, vmax] widened to include 0 so padded
+      slots stay exactly representable: scale=(vmax-vmin)/255,
+      zero=-128-vmin/scale, q=clip(rint(v/scale+zero)).  Max abs error is
+      scale/2.  A constant array quantizes exactly (scale=1, zero=-c).
+
+    scale/zero are rounded to float32 so every consumer (device kernels
+    included) dequantizes with bit-identical parameters.
+    """
+    dt = np.dtype(dtype)
+    if dt == np.float32:
+        return vals.astype(np.float32), 1.0, 0.0
+    if dt == np.float16:
+        return vals.astype(np.float16), 1.0, 0.0
+    if dt != np.int8:
+        raise ValueError(f"unsupported edge-value dtype {dtype!r}; "
+                         f"choose from {EDGE_VAL_DTYPES}")
+    v = np.asarray(vals, dtype=np.float32)
+    vmin = min(float(v.min(initial=0.0)), 0.0)
+    vmax = max(float(v.max(initial=0.0)), 0.0)
+    scale = (vmax - vmin) / 255.0
+    if scale == 0.0:
+        scale = 1.0
+    scale = float(np.float32(scale))
+    zero = float(np.float32(-128.0 - vmin / scale))
+    q = np.clip(np.rint(v / np.float32(scale) + np.float32(zero)),
+                -128, 127).astype(np.int8)
+    return q, scale, zero
+
+
+def dequantize_edge_vals(vals: np.ndarray, scale: float = 1.0,
+                         zero: float = 0.0) -> np.ndarray:
+    """Invert :func:`quantize_edge_vals` (float32 passes through untouched)."""
+    if vals.dtype == np.float32:
+        return vals
+    return ((vals.astype(np.float32) - np.float32(zero))
+            * np.float32(scale)).astype(np.float32)
+
 
 # --------------------------------------------------------------------------
 # Algorithm 1: compute vertex intervals
@@ -130,13 +187,25 @@ class ELLShard:
     start_vertex: int
     end_vertex: int
     cols: np.ndarray     # [R, W] int32, sentinel -1
-    vals: np.ndarray     # [R, W] float32 (all-ones for unweighted graphs)
+    vals: np.ndarray     # [R, W] float32 | float16 | int8 (see val_scale)
     row_map: np.ndarray  # [R] int32 — local destination row per ELL row
     nnz: int
+    # Affine dequantization parameters for non-float32 ``vals`` (identity for
+    # float32): true value = (vals.astype(f32) - val_zero) * val_scale.
+    val_scale: float = 1.0
+    val_zero: float = 0.0
 
     @property
     def shape(self) -> tuple[int, int]:
         return self.cols.shape  # (R, W)
+
+    @property
+    def quantized(self) -> bool:
+        return self.vals.dtype != np.float32
+
+    def vals_f32(self) -> np.ndarray:
+        """Edge values dequantized to float32 (host-side consumers)."""
+        return dequantize_edge_vals(self.vals, self.val_scale, self.val_zero)
 
     def padded_bytes(self) -> int:
         return self.cols.nbytes + self.vals.nbytes
@@ -219,6 +288,21 @@ def csr_to_ell(shard: CSRShard, max_width: int = 512, lane: int = LANE) -> ELLSh
         row_map=row_map,
         nnz=shard.nnz,
     )
+
+
+def quantize_shard(shard: ELLShard, dtype: str) -> ELLShard:
+    """Return ``shard`` with edge values stored as ``dtype`` (see
+    :func:`quantize_edge_vals`).  float32 (or already-matching dtype) is a
+    no-op returning the same object."""
+    if np.dtype(dtype) == shard.vals.dtype:
+        return shard
+    if shard.quantized:  # re-quantizing: recover float32 first
+        shard = dataclasses.replace(shard, vals=shard.vals_f32(),
+                                    val_scale=1.0, val_zero=0.0)
+    if np.dtype(dtype) == np.float32:
+        return shard
+    q, scale, zero = quantize_edge_vals(shard.vals, dtype)
+    return dataclasses.replace(shard, vals=q, val_scale=scale, val_zero=zero)
 
 
 def bucket_shards(shards: Sequence[ELLShard]) -> dict[tuple[int, int], list[ELLShard]]:

@@ -141,6 +141,7 @@ def _compact_packed(store: DeltaGraphStore, base, dirty) -> tuple[int, int]:
             header["shards"][p] = {
                 "start": int(s.start_vertex), "end": int(s.end_vertex),
                 "nnz": int(s.nnz), "nbytes": len(store._blobs[p]),
+                "val_scale": float(s.val_scale), "val_zero": float(s.val_zero),
                 "cols": _write_segment(f, s.cols),
                 "vals": _write_segment(f, s.vals),
                 "row_map": _write_segment(f, s.row_map)}

@@ -42,7 +42,7 @@ import threading
 import numpy as np
 
 from repro.core.bloom import BloomFilter
-from repro.core.shards import CSRShard, ELLShard, csr_to_ell
+from repro.core.shards import CSRShard, ELLShard, csr_to_ell, quantize_shard
 from repro.graph.source import ShardSourceBase, pack_shard_npz
 
 _EPOCH_LOG_CAP = 256  # commits remembered for incremental-recompute seeding
@@ -100,8 +100,9 @@ def _ell_to_csr_triples(shard: ELLShard):
     mask = shard.cols >= 0
     r_idx, c_idx = np.nonzero(mask)
     local = shard.row_map[r_idx].astype(np.int64)
+    # vals_f32 dequantizes int8/float16 edge values (float32 passes through)
     return local, shard.cols[r_idx, c_idx].astype(np.int64), \
-        shard.vals[r_idx, c_idx].astype(np.float32)
+        shard.vals_f32()[r_idx, c_idx].astype(np.float32)
 
 
 class DeltaGraphStore(ShardSourceBase):
@@ -364,6 +365,9 @@ class DeltaGraphStore(ShardSourceBase):
             col=m_srcs.astype(np.int32), val=m_vals.astype(np.float32))
         merged = csr_to_ell(csr, max_width=self._ell_max_width(),
                             lane=self._lane)
+        vd = self._val_dtype()
+        if vd != "float32" and self._prop.get("weighted"):
+            merged = quantize_shard(merged, vd)  # keep the store's edge dtype
         blob = pack_shard_npz(merged)
 
         # degrees + shard meta + epoch-log ingredients
@@ -389,6 +393,9 @@ class DeltaGraphStore(ShardSourceBase):
     # -- layout parameters ---------------------------------------------------
     def _ell_max_width(self) -> int:
         return int(self._prop.get("ell_max_width", 512))
+
+    def _val_dtype(self) -> str:
+        return str(self._prop.get("val_dtype", "float32"))
 
     def _infer_lane(self) -> int:
         """Layout lane: recorded by preprocess since the delta subsystem

@@ -115,6 +115,7 @@ def _write_packed(source: ShardSource, tmp: Path, header: dict) -> None:
             header["shards"].append({
                 "start": int(s.start_vertex), "end": int(s.end_vertex),
                 "nnz": int(s.nnz), "nbytes": int(source.shard_nbytes(p)),
+                "val_scale": float(s.val_scale), "val_zero": float(s.val_zero),
                 "cols": _write_segment(f, s.cols),
                 "vals": _write_segment(f, s.vals),
                 "row_map": _write_segment(f, s.row_map),
@@ -192,6 +193,8 @@ class PackedGraphStore(ShardSourceBase):
             cols=self._view(rec["cols"]),
             vals=self._view(rec["vals"]),
             row_map=self._view(rec["row_map"]),
+            val_scale=float(rec.get("val_scale", 1.0)),
+            val_zero=float(rec.get("val_zero", 0.0)),
         )
 
     def read_shard(self, shard_id: int) -> ELLShard:

@@ -14,14 +14,26 @@ preprocessing run serves every application (PR/SSSP/CC share the store).
 from __future__ import annotations
 
 import json
+import os
 import time
 from pathlib import Path
 
 import numpy as np
 
 from repro.core.bloom import BloomFilter
-from repro.core.shards import CSRShard, compute_intervals, csr_to_ell
+from repro.core.shards import (EDGE_VAL_DTYPES, CSRShard, compute_intervals,
+                               csr_to_ell, quantize_shard)
 from repro.graph.storage import GraphStore, iter_edge_list
+
+
+def resolve_val_dtype(val_dtype: str | None) -> str:
+    """Edge-value storage dtype: explicit arg > GRAPHMP_EDGE_DTYPE > float32."""
+    if val_dtype is None:
+        val_dtype = os.environ.get("GRAPHMP_EDGE_DTYPE") or "float32"
+    if val_dtype not in EDGE_VAL_DTYPES:
+        raise ValueError(f"val_dtype must be one of {EDGE_VAL_DTYPES}, "
+                         f"got {val_dtype!r}")
+    return val_dtype
 
 
 def preprocess_graph(
@@ -32,7 +44,9 @@ def preprocess_graph(
     bloom_fp_rate: float = 0.01,
     num_vertices: int | None = None,
     lane: int = 128,
+    val_dtype: str | None = None,
 ) -> GraphStore:
+    val_dtype = resolve_val_dtype(val_dtype)
     store = GraphStore(out_dir)
     t0 = time.time()
 
@@ -99,6 +113,10 @@ def preprocess_graph(
             row=row, col=src_sorted.astype(np.int32), val=vals,
         )
         ell = csr_to_ell(csr, max_width=ell_max_width, lane=lane)
+        if weighted and val_dtype != "float32":
+            # quantize per shard (scale/zero recorded in the blob); unweighted
+            # graphs keep unit float32 vals — the npz codec already elides them
+            ell = quantize_shard(ell, val_dtype)
         store.write_shard(ell)
         store.write_bloom(p, BloomFilter.build(ell.source_vertices(), num_bits=bloom_bits))
         shard_meta.append({"rows": int(ell.shape[0]), "width": int(ell.shape[1]), "nnz": ell.nnz})
@@ -113,6 +131,7 @@ def preprocess_graph(
             "num_shards": P,
             "intervals": [int(s) for s in starts],
             "weighted": weighted,
+            "val_dtype": val_dtype if weighted else "float32",
             "threshold_edge_num": int(threshold_edge_num),
             "ell_max_width": int(ell_max_width),
             "lane": int(lane),  # DeltaGraphStore re-lays dirty shards with it

@@ -116,7 +116,8 @@ def pack_shard_npz(shard: ELLShard) -> bytes:
     """
     buf = _io.BytesIO()
     mask = shard.cols >= 0
-    unit = bool(np.array_equal(shard.vals, mask.astype(np.float32)))
+    unit = (shard.vals.dtype == np.float32
+            and bool(np.array_equal(shard.vals, mask.astype(np.float32))))
     payload = dict(
         cols=shard.cols,
         row_map=shard.row_map,
@@ -125,6 +126,11 @@ def pack_shard_npz(shard: ELLShard) -> bytes:
     )
     if not unit:
         payload["vals"] = shard.vals
+        if shard.vals.dtype != np.float32:
+            # affine dequant params for quantized edge values; float64 so
+            # the (float32-rounded) python floats round-trip exactly
+            payload["qparams"] = np.array([shard.val_scale, shard.val_zero],
+                                          dtype=np.float64)
     np.savez(buf, **payload)
     return buf.getvalue()
 
@@ -135,6 +141,10 @@ def unpack_shard_npz(shard_id: int, blob: bytes) -> ELLShard:
         cols = z["cols"]
         unit = len(meta) > 3 and bool(meta[3])
         vals = (cols >= 0).astype(np.float32) if unit else z["vals"]
+        scale, zero = 1.0, 0.0
+        if "qparams" in z.files:
+            qp = z["qparams"]
+            scale, zero = float(qp[0]), float(qp[1])
         return ELLShard(
             shard_id=shard_id,
             start_vertex=int(meta[0]),
@@ -143,6 +153,8 @@ def unpack_shard_npz(shard_id: int, blob: bytes) -> ELLShard:
             cols=cols,
             vals=vals,
             row_map=z["row_map"],
+            val_scale=scale,
+            val_zero=zero,
         )
 
 

@@ -1,17 +1,31 @@
 """jit'd public wrappers for the SpMV kernels.
 
-``use_pallas='auto'`` picks the fastest correct path per platform: compiled
-Pallas kernels on TPU; on CPU the single-column kernels run Pallas in
-interpret mode (cheap enough, keeps the lowering exercised) but the BATCHED
-[n, K] fold falls back to the pure-jnp path — interpret mode executes the
-(K, R, W) grid step-by-step in Python and is ~10x slower per column, which
-would erase exactly the amortization ``run_batch``/GraphService exist for.
-``True`` forces Pallas (interpret on CPU — the A/B correctness tests use
-this); ``False`` forces the pure-jnp oracle path.
+Dispatch is honest about the platform (``_resolve``): backends with a real
+Pallas lowering (tpu/gpu) compile the kernels; everything else (cpu) runs
+them in interpret mode.  ``use_pallas`` selects the family:
+
+  * ``"auto"``  — fastest correct path per platform.  Compiled backends take
+    Pallas (fused gather→fold when the [n, K] frontier fits VMEM, otherwise
+    XLA-gather + native batched fold).  On CPU the single-column path keeps
+    Pallas in interpret mode (cheap enough, keeps the lowering exercised)
+    but the BATCHED [n, K] fold falls back to pure jnp — interpret mode
+    executes the grid step-by-step in Python with cost scaling in K, which
+    would erase exactly the amortization ``run_batch``/GraphService exist
+    for.  The demotion applies only when *interpreting*, never on a
+    compiled backend.
+  * ``True``    — force Pallas (interpret on CPU; the A/B referee tests use
+    this), including the fused kernel when the frontier fits.
+  * ``False``   — force the pure-jnp oracle path.
+
+Quantized edge values (int8/float16 + affine qparams) are dequantized
+in-kernel on the Pallas paths and via the bit-identical
+``ref.maybe_dequantize`` on the jnp path.  ``describe_dispatch`` reports the
+path a given configuration takes (used by the roofline report and docs).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -19,66 +33,134 @@ import jax.numpy as jnp
 from repro.kernels.spmv import ref as _ref
 from repro.kernels.spmv import spmv as _pallas
 
+# Backends with a compiled Pallas lowering; anything else interprets.
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+# The fused gather→fold kernel keeps the whole [n, K] source matrix resident
+# in VMEM; frontiers bigger than this fall back to XLA-gather + batched fold.
+FUSED_X_BYTES_LIMIT = int(os.environ.get("GRAPHMP_FUSED_VMEM", 4 << 20))
 
 
 def _resolve(use_pallas) -> tuple[bool, bool]:
-    """-> (use_pallas, interpret)"""
-    if use_pallas == "auto":
-        return True, not _on_tpu()
-    return bool(use_pallas), not _on_tpu()
+    """-> (use_pallas, interpret), dispatching on the *actual* platform.
+
+    ``use_pallas=False`` short-circuits to the jnp path (no dead interpret
+    flag); otherwise interpret mode is reserved for backends without a
+    compiled Pallas lowering (cpu) — a GPU gets compiled kernels, not
+    step-by-step Python execution.
+    """
+    if not use_pallas:  # False
+        return False, False
+    return True, jax.default_backend() not in _COMPILED_BACKENDS
+
+
+def _fused_fits(n: int, k: int, itemsize: int = 4) -> bool:
+    return n * k * itemsize <= FUSED_X_BYTES_LIMIT
+
+
+def _pick_path(use_pallas, n: int, k: int, itemsize: int = 4) -> tuple[str, bool]:
+    """-> (path, interpret) with path in {'jnp', 'pallas-fold', 'pallas-fused'}.
+
+    The spmv dispatch table (docs/ARCHITECTURE.md "Kernels"):
+      * jnp            — use_pallas=False anywhere, or "auto" on an
+        interpreting backend with K > 1 (the batched-interpret demotion).
+      * pallas-fused   — compiled backends (and forced ``True``) when the
+        [n, K] frontier fits FUSED_X_BYTES_LIMIT.
+      * pallas-fold    — everything else on the Pallas family: XLA gather +
+        fold kernel (single-column CPU "auto" stays here, preserving the
+        cheap interpret referee path).
+    """
+    use, interp = _resolve(use_pallas)
+    if not use:
+        return "jnp", False
+    if use_pallas == "auto" and interp and k > 1:
+        return "jnp", False  # interpret-mode cost scales with K; see docstring
+    if _fused_fits(n, k, itemsize) and (use_pallas is True or not interp):
+        return "pallas-fused", interp
+    return "pallas-fold", interp
+
+
+def describe_dispatch(use_pallas="auto", *, n: int, k: int = 1,
+                      itemsize: int = 4) -> str:
+    """Human-readable path ``ell_spmv``/``ell_spmv_batch`` takes on this
+    process's default backend: ``jnp`` | ``pallas:<mode>:<kernel>``."""
+    path, interp = _pick_path(use_pallas, n, k, itemsize)
+    if path == "jnp":
+        return "jnp"
+    mode = "interpret" if interp else "compiled"
+    kernel = "fused" if path == "pallas-fused" else "gather+fold"
+    return f"pallas:{mode}:{kernel}"
 
 
 @functools.partial(jax.jit, static_argnames=("semiring", "use_pallas"))
-def ell_fold(xg, vals, cols, semiring: str, use_pallas="auto"):
+def ell_fold(xg, vals, cols, semiring: str, use_pallas="auto", qparams=None):
     use, interp = _resolve(use_pallas)
     if use:
-        return _pallas.ell_fold_pallas(xg, vals, cols, semiring, interpret=interp)
-    return _ref.ell_fold_ref(xg, vals, cols, semiring)
+        return _pallas.ell_fold_pallas(xg, vals, cols, semiring,
+                                       interpret=interp, qparams=qparams)
+    return _ref.ell_fold_ref(xg, _ref.maybe_dequantize(vals, qparams), cols,
+                             semiring)
 
 
 @functools.partial(jax.jit, static_argnames=("semiring", "use_pallas"))
-def ell_gather_fold(x_blk, cols, vals, semiring: str, use_pallas="auto"):
+def ell_gather_fold(x_blk, cols, vals, semiring: str, use_pallas="auto",
+                    qparams=None):
     use, interp = _resolve(use_pallas)
     if use:
-        return _pallas.ell_gather_fold_pallas(x_blk, cols, vals, semiring, interpret=interp)
-    return _ref.ell_gather_fold_ref(x_blk, cols, vals, semiring)
+        return _pallas.ell_gather_fold_pallas(x_blk, cols, vals, semiring,
+                                              interpret=interp, qparams=qparams)
+    return _ref.ell_gather_fold_ref(x_blk, cols,
+                                    _ref.maybe_dequantize(vals, qparams),
+                                    semiring)
 
 
 @functools.partial(jax.jit, static_argnames=("semiring", "num_segments", "use_pallas"))
 def ell_spmv(x, cols, vals, row_map, num_segments: int, semiring: str,
-             use_pallas="auto"):
-    """Full shard update: XLA HBM-gather + Pallas fold + segment combine.
+             use_pallas="auto", qparams=None):
+    """Full shard update: gather + fold + segment combine.
 
     x: [n] resident source array; returns [num_segments] partials for the
     shard's destination interval (identity where the interval has no edges).
+    On the fused path the gather happens inside the kernel against the
+    VMEM-resident frontier; otherwise XLA gathers from HBM first.
     """
-    # masking is handled inside the fold via cols>=0; clamp for a safe gather
-    xg = x[jnp.where(cols >= 0, cols, 0)]
-    partials = ell_fold(xg, vals, cols, semiring, use_pallas=use_pallas)
+    path, interp = _pick_path(use_pallas, x.shape[0], 1, x.dtype.itemsize)
+    if path == "jnp":
+        return _ref.ell_spmv_ref(x, cols, _ref.maybe_dequantize(vals, qparams),
+                                 row_map, num_segments, semiring)
+    if path == "pallas-fused":
+        partials = _pallas.ell_spmv_fused_pallas(
+            x[:, None], cols, vals, semiring, interpret=interp, qparams=qparams)
+    else:
+        # masking is handled inside the fold via cols>=0; clamp for a safe gather
+        xg = x[jnp.where(cols >= 0, cols, 0)]
+        partials = _pallas.ell_fold_pallas(xg, vals, cols, semiring,
+                                           interpret=interp, qparams=qparams)
     return _ref.segment_combine(partials, row_map, num_segments, semiring)
 
 
 @functools.partial(jax.jit, static_argnames=("semiring", "num_segments", "use_pallas"))
 def ell_spmv_batch(x, cols, vals, row_map, num_segments: int, semiring: str,
-                   use_pallas="auto"):
+                   use_pallas="auto", qparams=None):
     """Batched shard update: one edge pass serves K frontiers.
 
     x: [n, K] resident source matrix; returns [num_segments, K] partials —
-    column k is exactly ``ell_spmv(x[:, k], ...)``.  The gather reads each
-    edge's K source values together; the fold streams the [R, W] edge tiles
-    once and reduces every column against them.
+    column k is exactly ``ell_spmv(x[:, k], ...)``.  The fused path keeps x
+    VMEM-resident and never materializes the [R, W, K] gathered matrix in
+    HBM; the fold path gathers once in XLA and feeds the kernel the native
+    [R, W, K] layout (no transpose round-trip).
     """
-    xg = x[jnp.where(cols >= 0, cols, 0)]      # [R, W, K]
-    use, interp = _resolve(use_pallas)
-    if use_pallas == "auto" and interp:
-        use = False  # interpret-mode cost scales with K; see module docstring
-    if use:
-        folded = _pallas.ell_fold_batch_pallas(
-            jnp.transpose(xg, (2, 0, 1)), vals, cols, semiring, interpret=interp)
-        partials = jnp.transpose(folded[:, :, 0], (1, 0))  # [R, K]
+    n, k = x.shape
+    path, interp = _pick_path(use_pallas, n, k, x.dtype.itemsize)
+    if path == "jnp":
+        xg = x[jnp.where(cols >= 0, cols, 0)]      # [R, W, K]
+        partials = _ref.ell_fold_batch_ref(xg, _ref.maybe_dequantize(vals, qparams),
+                                           cols, semiring)
+    elif path == "pallas-fused":
+        partials = _pallas.ell_spmv_fused_pallas(
+            x, cols, vals, semiring, interpret=interp, qparams=qparams)
     else:
-        partials = _ref.ell_fold_batch_ref(xg, vals, cols, semiring)
+        xg = x[jnp.where(cols >= 0, cols, 0)]      # [R, W, K]
+        partials = _pallas.ell_fold_batch_pallas(
+            xg, vals, cols, semiring, interpret=interp, qparams=qparams)
     return _ref.segment_combine_batch(partials, row_map, num_segments, semiring)

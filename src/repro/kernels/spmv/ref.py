@@ -16,6 +16,32 @@ def _as_semiring(s: Semiring | str) -> Semiring:
     return SEMIRINGS[s] if isinstance(s, str) else s
 
 
+# Edge-value storage dtypes that carry affine qparams (see
+# repro.core.shards.quantize_edge_vals).  bfloat16 et al. pass through: only
+# these two dtypes are produced by the quantizer and carry scale/zero.
+QUANTIZED_DTYPES = (jnp.int8, jnp.float16)
+
+
+def maybe_dequantize(vals: jnp.ndarray, qparams: jnp.ndarray | None) -> jnp.ndarray:
+    """Dequantize int8/float16 edge values to float32 with the canonical
+    affine formula ``(q - zero) * scale``; other dtypes pass through.
+
+    ``qparams`` is a [2] float32 array (scale, zero); ``None`` means identity
+    parameters.  This is the *same* arithmetic the Pallas kernels apply
+    in-VMEM, so the jnp fallback and the kernel agree bitwise.
+    """
+    if vals.dtype not in QUANTIZED_DTYPES:
+        return vals
+    if qparams is None:
+        return vals.astype(jnp.float32)
+    qp = qparams.astype(jnp.float32)
+    # NOTE: backends may contract this multiply into an FMA with a following
+    # semiring add (min_plus's `w + s`), which single-rounds.  All dispatch
+    # paths contract identically — they stay bitwise-equal to each other —
+    # but can sit 1 ulp from a dequantize-then-combine oracle.
+    return (vals.astype(jnp.float32) - qp[1]) * qp[0]
+
+
 def ell_fold_ref(xg: jnp.ndarray, vals: jnp.ndarray, cols: jnp.ndarray,
                  semiring: Semiring | str) -> jnp.ndarray:
     """[R, W] gathered sources + edge vals -> [R, 1] per-ELL-row partials.

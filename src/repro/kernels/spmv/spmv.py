@@ -9,13 +9,28 @@ mask→combine→reduce in VMEM:
     XLA-native); kernel folds [R, W] tiles to [R, 1] partials.  Grid is
     (rows/TR, W/TW) with sequential accumulation over the W axis into the
     revisited output block (identity-init at the first W step).
+  * ``ell_fold_batch_pallas``  — batched fold over the *native* [R, W, K]
+    gather layout: the edge tile is read ONCE and folded against all K
+    source columns resident in the same VMEM block, so kernel-level edge
+    traffic no longer scales with K.
   * ``ell_gather_fold_pallas`` — 2-D-tiled (GridGraph-style) variant where
     the source *interval* block x_blk is VMEM-resident and the gather runs
-    inside the kernel.  This is the TPU-native analogue of GraphMP sliding
-    its window over vertex intervals: the window IS the VMEM block.
+    inside the kernel.
+  * ``ell_spmv_fused_pallas``  — the fused gather→fold kernel: the whole
+    [n, K] source matrix stays VMEM-resident across the grid and the gather
+    happens in-kernel, so the [R, W, K] gathered matrix is never
+    materialized in HBM.  Emits [R, K] per-ELL-row partials; the wrapped-row
+    segment-combine runs outside on the W×-smaller partials (in-kernel
+    scatter across row tiles is not expressible on TPU Pallas because
+    ``row_map`` segments span tiles).
 
-Both are validated in interpret mode against `ref.py` over shape/dtype/
-semiring sweeps (tests/test_kernels_spmv.py).
+Edge values may arrive quantized (int8/float16, see
+``repro.core.shards.quantize_edge_vals``); every kernel dequantizes them
+in-VMEM from a (1, 2) float32 (scale, zero) qparams block, so HBM traffic
+for edge values is the *quantized* byte count.
+
+All kernels are validated in interpret mode against `ref.py` over
+shape/dtype/semiring sweeps (tests/test_kernels_spmv.py).
 """
 from __future__ import annotations
 
@@ -26,13 +41,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.semiring import SEMIRINGS, Semiring
+from repro.core.shards import LANE, SUBLANE
 
 DEFAULT_TR = 256  # row-tile (multiple of 8 sublanes)
 DEFAULT_TW = 512  # width-tile (multiple of 128 lanes)
 
+# VMEM budget for the gathered-source tile of the batched kernels: the
+# [tr, tw, K] block is the largest resident array, so (tr, tw) shrink until
+# it fits (TPU cores have ~16 MB VMEM; 2 MB leaves room for edges + output).
+TILE_BYTES_BUDGET = 2 << 20
+
+# Edge-value dtypes that carry affine qparams (scale, zero).  bfloat16 and
+# other float dtypes pass through the semiring untouched.
+QUANTIZED_DTYPES = (jnp.int8, jnp.float16)
+
 
 def _as_semiring(s: Semiring | str) -> Semiring:
     return SEMIRINGS[s] if isinstance(s, str) else s
+
+
+def _is_quantized(vals) -> bool:
+    return vals.dtype in QUANTIZED_DTYPES
+
+
+def _qparams_2d(qparams) -> jnp.ndarray:
+    """Canonical (1, 2) float32 (scale, zero) block for the kernels."""
+    if qparams is None:
+        qparams = jnp.asarray([1.0, 0.0], jnp.float32)
+    return jnp.asarray(qparams, jnp.float32).reshape(1, 2)
+
+
+def _edge_tile(vals_ref, qp_ref):
+    """Edge-value tile, dequantized in-VMEM when a qparams block is present.
+
+    The affine formula matches ``ref.maybe_dequantize`` exactly so the jnp
+    fallback and the kernels agree bitwise.
+    """
+    if qp_ref is None:
+        return vals_ref[...]
+    return (vals_ref[...].astype(jnp.float32) - qp_ref[0, 1]) * qp_ref[0, 0]
 
 
 def _fold_tile(sem: Semiring, vals, xg, cols):
@@ -46,9 +93,42 @@ def _fold_tile(sem: Semiring, vals, xg, cols):
     return jnp.min(contrib, axis=-1, keepdims=True)
 
 
-def _ell_fold_kernel(xg_ref, vals_ref, cols_ref, out_ref, *, sem: Semiring):
+def _fold_tile_batch(sem: Semiring, vals, xg, cols):
+    """[tr, tw] edges × [tr, tw, K] gathered sources -> [tr, K] partials."""
+    mask = cols >= 0
+    contrib = sem.combine(vals[:, :, None], xg)
+    contrib = jnp.where(mask[:, :, None], contrib,
+                        jnp.asarray(sem.identity, contrib.dtype))
+    if sem.is_plus:
+        return jnp.sum(contrib, axis=1)
+    if sem.is_max:
+        return jnp.max(contrib, axis=1)
+    return jnp.min(contrib, axis=1)
+
+
+def _batch_tiles(R: int, W: int, K: int, itemsize: int = 4) -> tuple[int, int]:
+    """(tr, tw) such that the [tr, tw, K] source tile fits the VMEM budget."""
+    tr, tw = min(DEFAULT_TR, R), min(DEFAULT_TW, W)
+    floor_w, floor_r = min(W, LANE), min(R, SUBLANE)
+    while tr * tw * K * itemsize > TILE_BYTES_BUDGET and tw > floor_w:
+        tw = max(tw // 2, floor_w)
+    while tr * tw * K * itemsize > TILE_BYTES_BUDGET and tr > floor_r:
+        tr = max(tr // 2, floor_r)
+    return tr, tw
+
+
+def _split_qp(rest):
+    """Kernel arg unpacking: rest is (out_ref,) or (qp_ref, out_ref)."""
+    if len(rest) == 2:
+        return rest[0], rest[1]
+    return None, rest[0]
+
+
+def _ell_fold_kernel(xg_ref, vals_ref, cols_ref, *rest, sem: Semiring):
+    qp_ref, out_ref = _split_qp(rest)
     w_step = pl.program_id(1)
-    partial = _fold_tile(sem, vals_ref[...], xg_ref[...], cols_ref[...])
+    partial = _fold_tile(sem, _edge_tile(vals_ref, qp_ref), xg_ref[...],
+                         cols_ref[...])
 
     @pl.when(w_step == 0)
     def _init():
@@ -62,83 +142,97 @@ def _ell_fold_kernel(xg_ref, vals_ref, cols_ref, out_ref, *, sem: Semiring):
 @functools.partial(jax.jit, static_argnames=("semiring", "tr", "tw", "interpret"))
 def ell_fold_pallas(xg: jnp.ndarray, vals: jnp.ndarray, cols: jnp.ndarray,
                     semiring: str, tr: int = DEFAULT_TR, tw: int = DEFAULT_TW,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool = True, qparams=None) -> jnp.ndarray:
     """[R, W] -> [R, 1] per-row semiring partials (pre-gathered sources)."""
     sem = _as_semiring(semiring)
     R, W = xg.shape
     tr = min(tr, R)
     tw = min(tw, W)
     grid = (pl.cdiv(R, tr), pl.cdiv(W, tw))
+    quant = _is_quantized(vals)
+    in_specs = [
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+    ]
+    args = [xg, vals, cols]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 2), lambda i, j: (0, 0)))
+        args.append(_qparams_2d(qparams))
     return pl.pallas_call(
         functools.partial(_ell_fold_kernel, sem=sem),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
-            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
-            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tr, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, 1), xg.dtype),
         interpret=interpret,
-    )(xg, vals, cols)
+    )(*args)
 
 
-def _ell_fold_batch_kernel(xg_ref, vals_ref, cols_ref, out_ref, *, sem: Semiring):
-    w_step = pl.program_id(2)
-    # xg block is (1, tr, tw): one column's tile against the shared edge tile.
-    # The K grid axis revisits each (i, j) edge block once per column, so
-    # HBM-level edge traffic still scales with K — the batching amortizes the
-    # disk + decompression + host→device tier (the system bottleneck), not
-    # VMEM streaming.  A K-resident block layout is the follow-up if kernel
-    # bandwidth ever dominates.
-    partial = _fold_tile(sem, vals_ref[...], xg_ref[0], cols_ref[...])
+def _ell_fold_batch_kernel(xg_ref, vals_ref, cols_ref, *rest, sem: Semiring):
+    qp_ref, out_ref = _split_qp(rest)
+    w_step = pl.program_id(1)
+    # xg block is (tr, tw, K): the edge tile is loaded once and folded
+    # against ALL K resident source columns — kernel-level edge traffic is
+    # amortized across the batch (the old [K, R, W] layout revisited each
+    # edge tile K times and needed a transpose round-trip around the call).
+    partial = _fold_tile_batch(sem, _edge_tile(vals_ref, qp_ref),
+                               xg_ref[...], cols_ref[...])
 
     @pl.when(w_step == 0)
     def _init():
-        out_ref[0] = partial
+        out_ref[...] = partial
 
     @pl.when(w_step != 0)
     def _acc():
-        out_ref[0] = sem.reduce(out_ref[0], partial)
+        out_ref[...] = sem.reduce(out_ref[...], partial)
 
 
 @functools.partial(jax.jit, static_argnames=("semiring", "tr", "tw", "interpret"))
 def ell_fold_batch_pallas(xg: jnp.ndarray, vals: jnp.ndarray, cols: jnp.ndarray,
-                          semiring: str, tr: int = DEFAULT_TR,
-                          tw: int = DEFAULT_TW,
-                          interpret: bool = True) -> jnp.ndarray:
-    """Batched fold: [K, R, W] gathered sources + shared [R, W] edges -> [K, R, 1].
+                          semiring: str, tr: int | None = None,
+                          tw: int | None = None,
+                          interpret: bool = True, qparams=None) -> jnp.ndarray:
+    """Batched fold over the native gather layout: [R, W, K] -> [R, K].
 
-    Grid is (K, rows/TR, W/TW) with the W axis innermost-sequential, exactly
-    like ``ell_fold_pallas`` — the K axis just revisits the same edge tiles
-    with a different source column.
+    Grid is (rows/TR, W/TW) with the W axis innermost-sequential, exactly
+    like ``ell_fold_pallas``; K stays resident inside each block.  Tile
+    sizes shrink automatically so the [tr, tw, K] source tile fits VMEM.
     """
     sem = _as_semiring(semiring)
-    K, R, W = xg.shape
-    tr = min(tr, R)
-    tw = min(tw, W)
-    grid = (K, pl.cdiv(R, tr), pl.cdiv(W, tw))
+    R, W, K = xg.shape
+    atr, atw = _batch_tiles(R, W, K, xg.dtype.itemsize)
+    tr = min(tr, R) if tr else atr
+    tw = min(tw, W) if tw else atw
+    grid = (pl.cdiv(R, tr), pl.cdiv(W, tw))
+    quant = _is_quantized(vals)
+    in_specs = [
+        pl.BlockSpec((tr, tw, K), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+    ]
+    args = [xg, vals, cols]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 2), lambda i, j: (0, 0)))
+        args.append(_qparams_2d(qparams))
     return pl.pallas_call(
         functools.partial(_ell_fold_batch_kernel, sem=sem),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, tr, tw), lambda k, i, j: (k, i, j)),
-            pl.BlockSpec((tr, tw), lambda k, i, j: (i, j)),
-            pl.BlockSpec((tr, tw), lambda k, i, j: (i, j)),
-        ],
-        out_specs=pl.BlockSpec((1, tr, 1), lambda k, i, j: (k, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((K, R, 1), xg.dtype),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tr, K), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, K), xg.dtype),
         interpret=interpret,
-    )(xg, vals, cols)
+    )(*args)
 
 
-def _ell_gather_fold_kernel(x_ref, cols_ref, vals_ref, out_ref, *, sem: Semiring):
+def _ell_gather_fold_kernel(x_ref, cols_ref, vals_ref, *rest, sem: Semiring):
+    qp_ref, out_ref = _split_qp(rest)
     w_step = pl.program_id(1)
     cols = cols_ref[...]
     safe = jnp.where(cols >= 0, cols, 0)
     # VMEM gather: the source interval block is fully resident in x_ref.
     xg = jnp.take(x_ref[0], safe.reshape(-1), axis=0).reshape(cols.shape)
-    partial = _fold_tile(sem, vals_ref[...], xg, cols)
+    partial = _fold_tile(sem, _edge_tile(vals_ref, qp_ref), xg, cols)
 
     @pl.when(w_step == 0)
     def _init():
@@ -152,7 +246,7 @@ def _ell_gather_fold_kernel(x_ref, cols_ref, vals_ref, out_ref, *, sem: Semiring
 @functools.partial(jax.jit, static_argnames=("semiring", "tr", "tw", "interpret"))
 def ell_gather_fold_pallas(x_blk: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
                            semiring: str, tr: int = DEFAULT_TR, tw: int = DEFAULT_TW,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool = True, qparams=None) -> jnp.ndarray:
     """2-D-tiled SpMV: cols index the VMEM-resident source block x_blk [VB]."""
     sem = _as_semiring(semiring)
     R, W = cols.shape
@@ -160,15 +254,80 @@ def ell_gather_fold_pallas(x_blk: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndar
     tr = min(tr, R)
     tw = min(tw, W)
     grid = (pl.cdiv(R, tr), pl.cdiv(W, tw))
+    quant = _is_quantized(vals)
+    in_specs = [
+        pl.BlockSpec((1, VB), lambda i, j: (0, 0)),  # whole interval, revisited
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+    ]
+    args = [x_blk[None, :], cols, vals]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 2), lambda i, j: (0, 0)))
+        args.append(_qparams_2d(qparams))
     return pl.pallas_call(
         functools.partial(_ell_gather_fold_kernel, sem=sem),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, VB), lambda i, j: (0, 0)),  # whole interval, revisited
-            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
-            pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tr, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, 1), x_blk.dtype),
         interpret=interpret,
-    )(x_blk[None, :], cols, vals)
+    )(*args)
+
+
+def _ell_spmv_fused_kernel(x_ref, cols_ref, vals_ref, *rest, sem: Semiring):
+    qp_ref, out_ref = _split_qp(rest)
+    w_step = pl.program_id(1)
+    cols = cols_ref[...]
+    safe = jnp.where(cols >= 0, cols, 0)
+    k = x_ref.shape[1]
+    # In-kernel gather: x [n, K] is fully VMEM-resident across the grid, so
+    # the [R, W, K] gathered matrix never exists in HBM.
+    xg = jnp.take(x_ref[...], safe.reshape(-1), axis=0)
+    xg = xg.reshape(cols.shape + (k,))
+    partial = _fold_tile_batch(sem, _edge_tile(vals_ref, qp_ref), xg, cols)
+
+    @pl.when(w_step == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(w_step != 0)
+    def _acc():
+        out_ref[...] = sem.reduce(out_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "tr", "tw", "interpret"))
+def ell_spmv_fused_pallas(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                          semiring: str, tr: int | None = None,
+                          tw: int | None = None,
+                          interpret: bool = True, qparams=None) -> jnp.ndarray:
+    """Fused gather→fold: [n, K] resident sources + [R, W] edges -> [R, K].
+
+    The caller gates this on ``n * K * itemsize`` fitting a VMEM budget
+    (ops.FUSED_X_BYTES_LIMIT); the wrapped-row segment-combine runs outside
+    the kernel on the W×-smaller [R, K] partials.
+    """
+    sem = _as_semiring(semiring)
+    R, W = cols.shape
+    n, K = x.shape
+    atr, atw = _batch_tiles(R, W, K, x.dtype.itemsize)
+    tr = min(tr, R) if tr else atr
+    tw = min(tw, W) if tw else atw
+    grid = (pl.cdiv(R, tr), pl.cdiv(W, tw))
+    quant = _is_quantized(vals)
+    in_specs = [
+        pl.BlockSpec((n, K), lambda i, j: (0, 0)),  # whole frontier, revisited
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+        pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+    ]
+    args = [x, cols, vals]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 2), lambda i, j: (0, 0)))
+        args.append(_qparams_2d(qparams))
+    return pl.pallas_call(
+        functools.partial(_ell_spmv_fused_kernel, sem=sem),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tr, K), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, K), x.dtype),
+        interpret=interpret,
+    )(*args)

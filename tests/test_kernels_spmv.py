@@ -1,4 +1,5 @@
 """Pallas kernel sweeps vs the pure-jnp oracle (interpret mode on CPU)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -6,8 +7,9 @@ import pytest
 from tests._hypo import given, settings, st
 
 from repro.core.semiring import SEMIRINGS
-from repro.kernels.spmv import ref
-from repro.kernels.spmv.ops import ell_fold, ell_gather_fold, ell_spmv
+from repro.kernels.spmv import ops, ref, spmv
+from repro.kernels.spmv.ops import (describe_dispatch, ell_fold,
+                                    ell_gather_fold, ell_spmv, ell_spmv_batch)
 
 SEMIS = list(SEMIRINGS)
 SHAPES = [(8, 128), (64, 256), (256, 128), (512, 640)]
@@ -85,3 +87,134 @@ def test_all_masked_rows_give_identity():
         out = ell_spmv(x, cols, vals, jnp.zeros((8,), jnp.int32), 8, semiring,
                        use_pallas=True)
         assert np.asarray(out)[1:].tolist() == [sem.identity] * 7
+
+
+# ---------------------------------------------------------------------------
+# fused gather→fold kernel + batched native layout + dispatch
+# ---------------------------------------------------------------------------
+EXACT_SEMIS = ["min_plus", "max_src"]  # no float re-association: bitwise
+
+
+def _make_batch(rng, n, R, W, K):
+    cols = rng.integers(-1, n, size=(R, W)).astype(np.int32)
+    vals = rng.random((R, W)).astype(np.float32)
+    x = rng.random((n, K)).astype(np.float32)
+    row_map = np.sort(rng.integers(0, max(R // 2, 1), size=R)).astype(np.int32)
+    return cols, vals, x, row_map
+
+
+@pytest.mark.parametrize("semiring", EXACT_SEMIS)
+@pytest.mark.parametrize("k", [1, 5])
+def test_fused_vs_unfused_bitwise(semiring, k):
+    """The fused in-kernel-gather path is bitwise-identical to the unfused
+    XLA-gather + fold kernel on exact (min/max) semirings."""
+    rng = np.random.default_rng(42 + k)
+    n, R, W = 700, 64, 256
+    cols, vals, x, row_map = _make_batch(rng, n, R, W, k)
+    fused = spmv.ell_spmv_fused_pallas(
+        jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals), semiring,
+        interpret=True)
+    xg = x[np.where(cols >= 0, cols, 0)]
+    unfused = spmv.ell_fold_batch_pallas(
+        jnp.asarray(xg), jnp.asarray(vals), jnp.asarray(cols), semiring,
+        interpret=True)
+    assert np.array_equal(np.asarray(fused), np.asarray(unfused))
+    want = ref.ell_fold_batch_ref(jnp.asarray(xg), jnp.asarray(vals),
+                                  jnp.asarray(cols), semiring)
+    assert np.array_equal(np.asarray(fused), np.asarray(want))
+
+
+@pytest.mark.parametrize("semiring", SEMIS)
+def test_batch_native_layout_vs_ref(semiring):
+    """ell_fold_batch_pallas consumes [R, W, K] natively — no transpose
+    round-trip — and matches the oracle."""
+    rng = np.random.default_rng(5)
+    cols, vals, x, _ = _make_batch(rng, 400, 72, 384, 6)
+    xg = x[np.where(cols >= 0, cols, 0)]
+    out = spmv.ell_fold_batch_pallas(jnp.asarray(xg), jnp.asarray(vals),
+                                     jnp.asarray(cols), semiring,
+                                     interpret=True)
+    want = ref.ell_fold_batch_ref(jnp.asarray(xg), jnp.asarray(vals),
+                                  jnp.asarray(cols), semiring)
+    assert out.shape == (72, 6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+def _count_gathers_outside_pallas(jaxpr) -> int:
+    """Walk a jaxpr (descending into pjit etc.) counting gather ops that are
+    NOT inside a pallas_call — i.e. XLA-materialized gathers in HBM."""
+    count = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue  # in-kernel gathers read from VMEM, not HBM
+        if eqn.primitive.name == "gather":
+            count += 1
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None:
+                count += _count_gathers_outside_pallas(inner)
+    return count
+
+
+def test_fused_path_has_no_hbm_gather():
+    """The fused kernel never materializes a gathered copy: zero XLA gathers
+    in the jaxpr.  The unfused Pallas path gathers exactly once (never the
+    double gather the pre-fix layout churn risked)."""
+    rng = np.random.default_rng(0)
+    n, R, W, k = 600, 16, 128, 3
+    cols, vals, x, row_map = _make_batch(rng, n, R, W, k)
+    args = (jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+            jnp.asarray(row_map))
+    fused_jaxpr = jax.make_jaxpr(
+        lambda *a: ell_spmv_batch(*a, R, "min_plus", use_pallas=True))(*args)
+    assert _count_gathers_outside_pallas(fused_jaxpr.jaxpr) == 0
+
+    # different shape (fresh trace) + a limit of 0 forces the unfused path
+    cols2, vals2, x2, row_map2 = _make_batch(rng, n, R, W * 2, k)
+    args2 = (jnp.asarray(x2), jnp.asarray(cols2), jnp.asarray(vals2),
+             jnp.asarray(row_map2))
+    old = ops.FUSED_X_BYTES_LIMIT
+    ops.FUSED_X_BYTES_LIMIT = 0
+    try:
+        fold_jaxpr = jax.make_jaxpr(
+            lambda *a: ell_spmv_batch(*a, R, "min_plus", use_pallas=True))(*args2)
+    finally:
+        ops.FUSED_X_BYTES_LIMIT = old
+    assert _count_gathers_outside_pallas(fold_jaxpr.jaxpr) == 1
+
+
+def test_dispatch_table_cpu():
+    """docs/ARCHITECTURE.md dispatch table, executable form (CPU backend)."""
+    assert describe_dispatch(False, n=1000, k=1) == "jnp"
+    assert describe_dispatch(False, n=1000, k=16) == "jnp"
+    # auto on an interpreting backend: single-column keeps the cheap Pallas
+    # referee path, batched falls back to jnp
+    assert describe_dispatch("auto", n=1000, k=1) == "pallas:interpret:gather+fold"
+    assert describe_dispatch("auto", n=1000, k=16) == "jnp"
+    # forced Pallas: fused when the frontier fits VMEM, fold otherwise
+    assert describe_dispatch(True, n=1000, k=16) == "pallas:interpret:fused"
+    big = ops.FUSED_X_BYTES_LIMIT  # bytes -> elements: guaranteed too big
+    assert describe_dispatch(True, n=big, k=16) == "pallas:interpret:gather+fold"
+
+
+def test_resolve_no_dead_interpret_flag():
+    """use_pallas=False short-circuits; 'auto'/True interpret only off the
+    compiled backends (the old code forced interpret on GPU)."""
+    assert ops._resolve(False) == (False, False)
+    use, interp = ops._resolve("auto")
+    assert use is True
+    assert interp == (jax.default_backend() not in ops._COMPILED_BACKENDS)
+
+
+@pytest.mark.parametrize("semiring", EXACT_SEMIS)
+def test_ops_batch_paths_agree_bitwise(semiring):
+    """Public ell_spmv_batch: forced-Pallas (fused), forced-jnp, and auto all
+    agree bitwise on exact semirings."""
+    rng = np.random.default_rng(17)
+    cols, vals, x, row_map = _make_batch(rng, 500, 32, 128, 4)
+    args = (jnp.asarray(x), jnp.asarray(cols), jnp.asarray(vals),
+            jnp.asarray(row_map), 32, semiring)
+    outs = [np.asarray(ell_spmv_batch(*args, use_pallas=up))
+            for up in (True, False, "auto")]
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[0], outs[2])
