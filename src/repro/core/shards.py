@@ -45,10 +45,14 @@ def quantize_edge_vals(vals: np.ndarray, dtype: str) -> tuple[np.ndarray, float,
 
     * float32 — identity (scale=1, zero=0).
     * float16 — plain downcast (scale=1, zero=0); error <= 2^-11 * |v|.
-    * int8    — affine over [vmin, vmax] widened to include 0 so padded
-      slots stay exactly representable: scale=(vmax-vmin)/255,
-      zero=-128-vmin/scale, q=clip(rint(v/scale+zero)).  Max abs error is
-      scale/2.  A constant array quantizes exactly (scale=1, zero=-c).
+    * int8    — affine over [vmin, vmax] widened to include 0, with the
+      zero point rounded to an *integer* so v=0 (and therefore padded
+      slots) quantizes to q=zero and dequantizes to exactly 0.0:
+      scale=(vmax-vmin)/255, zero=rint(-128-vmin/scale),
+      q=clip(rint(v/scale+zero)).  Max abs error stays scale/2: rounding
+      the zero point shifts the whole grid by delta in [-1/2, 1/2] steps,
+      and a range endpoint pushed past +-128 clips back by that same
+      delta.  An all-zero array quantizes exactly (scale=1, zero=-128).
 
     scale/zero are rounded to float32 so every consumer (device kernels
     included) dequantizes with bit-identical parameters.
@@ -68,7 +72,9 @@ def quantize_edge_vals(vals: np.ndarray, dtype: str) -> tuple[np.ndarray, float,
     if scale == 0.0:
         scale = 1.0
     scale = float(np.float32(scale))
-    zero = float(np.float32(-128.0 - vmin / scale))
+    # Integer zero point: 0 lies in [vmin, vmax] by construction, so zero
+    # lands in [-128, 127] and rint keeps it there — exact in float32.
+    zero = float(np.float32(np.rint(-128.0 - vmin / scale)))
     q = np.clip(np.rint(v / np.float32(scale) + np.float32(zero)),
                 -128, 127).astype(np.int8)
     return q, scale, zero

@@ -1,8 +1,9 @@
 """jit'd public wrappers for the SpMV kernels.
 
-Dispatch is honest about the platform (``_resolve``): backends with a real
-Pallas lowering (tpu/gpu) compile the kernels; everything else (cpu) runs
-them in interpret mode.  ``use_pallas`` selects the family:
+Dispatch is honest about the platform (``_resolve``): backends where the
+kernels are known-correct compiled (tpu — see ``_COMPILED_BACKENDS`` for why
+that list is TPU-only) compile them; everything else runs them in interpret
+mode.  ``use_pallas`` selects the family:
 
   * ``"auto"``  — fastest correct path per platform.  Compiled backends take
     Pallas (fused gather→fold when the [n, K] frontier fits VMEM, otherwise
@@ -11,8 +12,10 @@ them in interpret mode.  ``use_pallas`` selects the family:
     but the BATCHED [n, K] fold falls back to pure jnp — interpret mode
     executes the grid step-by-step in Python with cost scaling in K, which
     would erase exactly the amortization ``run_batch``/GraphService exist
-    for.  The demotion applies only when *interpreting*, never on a
-    compiled backend.
+    for.  Non-CPU interpreting backends (gpu, until the kernels are ported)
+    demote to jnp for every K: the jnp path is fully XLA-compiled there,
+    while interpret mode would be step-by-step Python.  The demotion applies
+    only when *interpreting*, never on a compiled backend.
   * ``True``    — force Pallas (interpret on CPU; the A/B referee tests use
     this), including the fused kernel when the frontier fits.
   * ``False``   — force the pure-jnp oracle path.
@@ -33,8 +36,15 @@ import jax.numpy as jnp
 from repro.kernels.spmv import ref as _ref
 from repro.kernels.spmv import spmv as _pallas
 
-# Backends with a compiled Pallas lowering; anything else interprets.
-_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+# Backends allowed to COMPILE the Pallas kernels; anything else interprets
+# (or, under "auto", demotes to jnp — see _pick_path).  TPU-only on purpose:
+# every kernel in spmv.py accumulates into a revisited out_ref across the W
+# grid axis (pl.when(w_step != 0) read-modify-write), which is only safe
+# because TPU executes the grid sequentially.  GPU backends (cuda/rocm/
+# triton) run grid programs in parallel, so that accumulation races — and
+# the in-kernel jnp.take gather has no Triton lowering.  Do not add a GPU
+# backend here until the kernels are ported to (and tested on) one.
+_COMPILED_BACKENDS = ("tpu",)
 
 # The fused gather→fold kernel keeps the whole [n, K] source matrix resident
 # in VMEM; frontiers bigger than this fall back to XLA-gather + batched fold.
@@ -45,17 +55,38 @@ def _resolve(use_pallas) -> tuple[bool, bool]:
     """-> (use_pallas, interpret), dispatching on the *actual* platform.
 
     ``use_pallas=False`` short-circuits to the jnp path (no dead interpret
-    flag); otherwise interpret mode is reserved for backends without a
-    compiled Pallas lowering (cpu) — a GPU gets compiled kernels, not
-    step-by-step Python execution.
+    flag); otherwise interpret mode is everything off ``_COMPILED_BACKENDS``
+    — including GPU, whose parallel grid execution would race the kernels'
+    sequential W-axis accumulation if compiled (see the comment on
+    ``_COMPILED_BACKENDS``).
     """
     if not use_pallas:  # False
         return False, False
     return True, jax.default_backend() not in _COMPILED_BACKENDS
 
 
+def _auto_demotes(use_pallas, interp: bool, k: int) -> bool:
+    """Should an interpreting "auto" call take the jnp path instead?
+
+    Interpret mode earns its keep only as the cheap single-column CPU
+    referee path.  Batched folds demote (interpret cost scales with K), and
+    so does every non-CPU interpreting backend (gpu): there the jnp path is
+    fully XLA-compiled while interpret mode is step-by-step Python.
+    """
+    if use_pallas != "auto" or not interp:
+        return False
+    return k > 1 or jax.default_backend() != "cpu"
+
+
 def _fused_fits(n: int, k: int, itemsize: int = 4) -> bool:
-    return n * k * itemsize <= FUSED_X_BYTES_LIMIT
+    """True when the [n, K] frontier's VMEM footprint fits the fused gate.
+
+    Footprint is the *padded* block size: VMEM tiles the two minor dims to
+    (8 sublane, 128 lane), so a K=1 column really occupies 128 lanes per
+    row — n*k*itemsize would under-count that case by 128x and admit
+    frontiers that cannot compile on TPU.
+    """
+    return _pallas.vmem_block_bytes((n, k), itemsize) <= FUSED_X_BYTES_LIMIT
 
 
 def _pick_path(use_pallas, n: int, k: int, itemsize: int = 4) -> tuple[str, bool]:
@@ -63,7 +94,8 @@ def _pick_path(use_pallas, n: int, k: int, itemsize: int = 4) -> tuple[str, bool
 
     The spmv dispatch table (docs/ARCHITECTURE.md "Kernels"):
       * jnp            — use_pallas=False anywhere, or "auto" on an
-        interpreting backend with K > 1 (the batched-interpret demotion).
+        interpreting backend with K > 1 or off-CPU (the interpret
+        demotions; see ``_auto_demotes``).
       * pallas-fused   — compiled backends (and forced ``True``) when the
         [n, K] frontier fits FUSED_X_BYTES_LIMIT.
       * pallas-fold    — everything else on the Pallas family: XLA gather +
@@ -73,8 +105,8 @@ def _pick_path(use_pallas, n: int, k: int, itemsize: int = 4) -> tuple[str, bool
     use, interp = _resolve(use_pallas)
     if not use:
         return "jnp", False
-    if use_pallas == "auto" and interp and k > 1:
-        return "jnp", False  # interpret-mode cost scales with K; see docstring
+    if _auto_demotes(use_pallas, interp, k):
+        return "jnp", False
     if _fused_fits(n, k, itemsize) and (use_pallas is True or not interp):
         return "pallas-fused", interp
     return "pallas-fold", interp
@@ -95,7 +127,7 @@ def describe_dispatch(use_pallas="auto", *, n: int, k: int = 1,
 @functools.partial(jax.jit, static_argnames=("semiring", "use_pallas"))
 def ell_fold(xg, vals, cols, semiring: str, use_pallas="auto", qparams=None):
     use, interp = _resolve(use_pallas)
-    if use:
+    if use and not _auto_demotes(use_pallas, interp, 1):
         return _pallas.ell_fold_pallas(xg, vals, cols, semiring,
                                        interpret=interp, qparams=qparams)
     return _ref.ell_fold_ref(xg, _ref.maybe_dequantize(vals, qparams), cols,
@@ -106,7 +138,7 @@ def ell_fold(xg, vals, cols, semiring: str, use_pallas="auto", qparams=None):
 def ell_gather_fold(x_blk, cols, vals, semiring: str, use_pallas="auto",
                     qparams=None):
     use, interp = _resolve(use_pallas)
-    if use:
+    if use and not _auto_demotes(use_pallas, interp, 1):
         return _pallas.ell_gather_fold_pallas(x_blk, cols, vals, semiring,
                                               interpret=interp, qparams=qparams)
     return _ref.ell_gather_fold_ref(x_blk, cols,

@@ -60,6 +60,30 @@ def _as_semiring(s: Semiring | str) -> Semiring:
     return SEMIRINGS[s] if isinstance(s, str) else s
 
 
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def vmem_block_bytes(shape, itemsize: int = 4) -> int:
+    """Actual VMEM footprint of a block of the given shape.
+
+    VMEM lays blocks out in (8 sublane, 128 lane) tiles over the two minor
+    dims, so both are padded up: a [tr, tw, 1] source tile really occupies
+    tr * tw * 128 elements, not tr * tw.  Every byte budget in this module
+    (and ops.FUSED_X_BYTES_LIMIT) must be compared against this padded
+    size — the unpadded product under-counts K=1 blocks by 128x.
+    """
+    dims = list(shape)
+    if len(dims) >= 1:
+        dims[-1] = _round_up(dims[-1], LANE)
+    if len(dims) >= 2:
+        dims[-2] = _round_up(dims[-2], SUBLANE)
+    total = itemsize
+    for d in dims:
+        total *= d
+    return total
+
+
 def _is_quantized(vals) -> bool:
     return vals.dtype in QUANTIZED_DTYPES
 
@@ -107,12 +131,17 @@ def _fold_tile_batch(sem: Semiring, vals, xg, cols):
 
 
 def _batch_tiles(R: int, W: int, K: int, itemsize: int = 4) -> tuple[int, int]:
-    """(tr, tw) such that the [tr, tw, K] source tile fits the VMEM budget."""
+    """(tr, tw) such that the [tr, tw, K] source tile fits the VMEM budget.
+
+    The budget is checked against the *padded* footprint
+    (``vmem_block_bytes``): K sits on the lane dim and pads to 128, so small
+    K shrinks (tr, tw) much harder than the raw element count suggests.
+    """
     tr, tw = min(DEFAULT_TR, R), min(DEFAULT_TW, W)
     floor_w, floor_r = min(W, LANE), min(R, SUBLANE)
-    while tr * tw * K * itemsize > TILE_BYTES_BUDGET and tw > floor_w:
+    while vmem_block_bytes((tr, tw, K), itemsize) > TILE_BYTES_BUDGET and tw > floor_w:
         tw = max(tw // 2, floor_w)
-    while tr * tw * K * itemsize > TILE_BYTES_BUDGET and tr > floor_r:
+    while vmem_block_bytes((tr, tw, K), itemsize) > TILE_BYTES_BUDGET and tr > floor_r:
         tr = max(tr // 2, floor_r)
     return tr, tw
 
@@ -302,9 +331,10 @@ def ell_spmv_fused_pallas(x: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
                           interpret: bool = True, qparams=None) -> jnp.ndarray:
     """Fused gather→fold: [n, K] resident sources + [R, W] edges -> [R, K].
 
-    The caller gates this on ``n * K * itemsize`` fitting a VMEM budget
-    (ops.FUSED_X_BYTES_LIMIT); the wrapped-row segment-combine runs outside
-    the kernel on the W×-smaller [R, K] partials.
+    The caller gates this on the padded [n, K] footprint
+    (``vmem_block_bytes``) fitting a VMEM budget (ops.FUSED_X_BYTES_LIMIT);
+    the wrapped-row segment-combine runs outside the kernel on the
+    W×-smaller [R, K] partials.
     """
     sem = _as_semiring(semiring)
     R, W = cols.shape

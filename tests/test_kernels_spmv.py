@@ -206,6 +206,50 @@ def test_resolve_no_dead_interpret_flag():
     assert interp == (jax.default_backend() not in ops._COMPILED_BACKENDS)
 
 
+def test_compiled_dispatch_is_tpu_only(monkeypatch):
+    """GPU backends run grid programs in parallel, so the kernels' sequential
+    W-axis accumulation must never compile there: 'auto' demotes to the
+    fully-XLA-compiled jnp path, forced True keeps the interpret referee."""
+    assert ops._COMPILED_BACKENDS == ("tpu",)
+    for backend in ("gpu", "cuda", "rocm"):
+        monkeypatch.setattr(jax, "default_backend", lambda b=backend: b)
+        assert ops._resolve("auto") == (True, True)
+        assert describe_dispatch("auto", n=1000, k=1) == "jnp"
+        assert describe_dispatch("auto", n=1000, k=16) == "jnp"
+        assert describe_dispatch(True, n=1000, k=16) == "pallas:interpret:fused"
+
+
+def test_vmem_block_bytes_padding():
+    """VMEM tiles the two minor dims to (8 sublane, 128 lane): a K=1 column
+    occupies 128 lanes per row, which the unpadded n*k*itemsize model
+    under-counted by 128x."""
+    assert spmv.vmem_block_bytes((1000, 1), 4) == 1000 * 128 * 4
+    assert spmv.vmem_block_bytes((32, 100, 16), 4) == 32 * 104 * 128 * 4
+    # aligned shapes pad to themselves
+    assert spmv.vmem_block_bytes((256, 8, 128), 4) == 256 * 8 * 128 * 4
+
+
+def test_fused_gate_uses_padded_bytes():
+    """The fused K=1 gate must admit only frontiers whose PADDED footprint
+    fits — n rows cost n*512 bytes in f32, not n*4."""
+    limit = ops.FUSED_X_BYTES_LIMIT
+    n_fits = limit // (128 * 4)  # padded bytes land exactly on the limit
+    assert ops._fused_fits(n_fits, 1, 4)
+    assert not ops._fused_fits(n_fits + 8, 1, 4)
+    # the old unpadded model would have admitted that frontier easily
+    assert (n_fits + 8) * 1 * 4 < limit
+
+
+def test_batch_tiles_respect_padded_budget():
+    """Auto-shrunk [tr, tw, K] tiles fit TILE_BYTES_BUDGET under the padded
+    model (or sit at the (SUBLANE, LANE) floor, the smallest legal tile)."""
+    for (R, W, K) in [(512, 1024, 1), (512, 1024, 16), (64, 256, 4)]:
+        tr, tw = spmv._batch_tiles(R, W, K, 4)
+        at_floor = tr <= min(R, spmv.SUBLANE) and tw <= min(W, spmv.LANE)
+        assert (spmv.vmem_block_bytes((tr, tw, K), 4)
+                <= spmv.TILE_BYTES_BUDGET) or at_floor
+
+
 @pytest.mark.parametrize("semiring", EXACT_SEMIS)
 def test_ops_batch_paths_agree_bitwise(semiring):
     """Public ell_spmv_batch: forced-Pallas (fused), forced-jnp, and auto all

@@ -55,6 +55,12 @@ def test_int8_constant_and_zero_exact():
     with_zero = np.array([[0.0, 7.5]], np.float32)
     q, scale, zero = quantize_edge_vals(with_zero, "int8")
     assert dequantize_edge_vals(q, scale, zero)[0, 0] == 0.0
+    # ...including when vmin < 0 makes the raw zero point fractional: the
+    # quantizer rounds it to an integer so dequant(q(0)) == 0.0 exactly
+    mixed = np.array([[-3.7, 0.0, 11.1]], np.float32)
+    q, scale, zero = quantize_edge_vals(mixed, "int8")
+    assert zero == np.rint(zero)
+    assert dequantize_edge_vals(q, scale, zero)[0, 1] == 0.0
 
 
 def test_float16_roundtrip_error_bound():
